@@ -1,0 +1,36 @@
+"""Roofline-term rows from the dry-run artifacts (EXPERIMENTS.md §Roofline
+as CSV). Reads experiments/dryrun/*.json; skips quietly if the sweep has
+not been run in this checkout (scripts_dryrun_all.sh regenerates it).
+"""
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run(emit):
+    files = sorted(glob.glob(
+        os.path.join(ROOT, "experiments", "dryrun", "*__single.json")))
+    if not files:
+        emit("roofline/skipped", derived="run scripts_dryrun_all.sh first")
+        return
+    from repro.roofline.report import enrich
+    n = 0
+    for f in files:
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        rec = enrich(rec)
+        rf = rec["roofline"]
+        emit(
+            f"roofline/{rec['arch']}/{rec['shape']}",
+            derived=(f"compute={rf['compute_s']:.3f}s "
+                     f"mem={rf['memory_s']:.3f}s "
+                     f"coll={rf['collective_s']:.3f}s "
+                     f"dom={rf['dominant']} "
+                     f"6ND/HLO={rf['useful_flops_ratio']:.2f} "
+                     f"peak={rec['memory']['peak_per_device_gib']}GiB"),
+        )
+        n += 1
+    assert n >= 30, f"expected >=30 single-pod cells, got {n}"

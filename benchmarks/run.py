@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. TOPS numbers are TPU-v5e
+analytical-model projections (this container is CPU-only); ``us_per_call``
+columns are real measured wall-clock where the module measures one.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig6]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def _emitter(rows):
+    def emit(name, us_per_call=float("nan"), derived=""):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}")
+    return emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys to run")
+    args = ap.parse_args()
+
+    from benchmarks import (fig6_kmt, fig78_sweep, roofline_cells,
+                            sec532_buffering, sec533_overlap, table1_kernel,
+                            table23_balanced, wallclock)
+    modules = {
+        "table1": [table1_kernel.run],
+        "table23": [table23_balanced.run, table23_balanced.run_skinny],
+        "fig6": [fig6_kmt.run],
+        "fig78": [fig78_sweep.run],
+        "sec532": [sec532_buffering.run],
+        "sec533": [sec533_overlap.run],
+        "wallclock": [wallclock.run],
+        "roofline": [roofline_cells.run],
+    }
+    only = set(args.only.split(",")) if args.only else set(modules)
+    rows = []
+    emit = _emitter(rows)
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, fns in modules.items():
+        if key not in only:
+            continue
+        for fn in fns:
+            t0 = time.time()
+            try:
+                fn(emit)
+            except Exception as e:
+                failures += 1
+                print(f"{key},nan,FAILED: {type(e).__name__}: {e}",
+                      file=sys.stderr)
+                traceback.print_exc(limit=3)
+            print(f"# {key}/{fn.__name__} took {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Measured wall-clock benchmarks (real numbers on this host's XLA:CPU).
+
+The roofline/TOPS tables elsewhere are TPU-target *model* projections; this
+module grounds the harness with actual measured times: kernel interpret-mode
+grid costs, the end-to-end smoke train step, and a decode step. These are
+the ``us_per_call`` columns of the CSV.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro import models
+from repro.data.synthetic import batch_for
+from repro.kernels import ops
+from repro.launch.mesh import make_local_mesh
+from repro.train.trainstep import make_train_step
+
+
+def _time(fn, *args, repeats=5):
+    fn(*args)  # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    # XLA:CPU GEMM through the public API (fallback path)
+    a = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    us = _time(lambda: ops.balanced_matmul(a, b, backend="xla"))
+    emit("wallclock/gemm-512-xla", us_per_call=us,
+         derived=f"gflops={2*512**3/us/1e3:.1f}")
+
+    # interpret-mode kernel (one grid step cost dominates)
+    ai = jnp.asarray(rng.integers(-100, 100, size=(128, 256)), jnp.int8)
+    bi = jnp.asarray(rng.integers(-100, 100, size=(256, 128)), jnp.int8)
+    us = _time(lambda: ops.balanced_matmul(
+        ai, bi, plan=ops.GemmPlan(64, 128, 128), out_dtype=jnp.int32,
+        backend="interpret"), repeats=2)
+    emit("wallclock/gemm-int8-interpret", us_per_call=us,
+         derived="pallas-interpret validation path")
+
+    # end-to-end smoke train + decode steps
+    for arch in ["qwen1.5-4b", "olmoe-1b-7b", "rwkv6-3b"]:
+        cfg = C.smoke(C.get_config(arch))
+        mesh = make_local_mesh(data=1, model=1)
+        art = make_train_step(cfg, mesh, global_batch=4, seq_len=64)
+        batch = {k: jnp.asarray(v)
+                 for k, v in batch_for(cfg, 64, 4, 0).items()}
+        with mesh:
+            state = art.init_fn(jax.random.PRNGKey(0))
+            state_box = [state]
+
+            def step():
+                # the step donates its input state: advance the box
+                s2, m = art.step_fn(state_box[0], batch)
+                state_box[0] = s2
+                return m["loss"]
+
+            us = _time(step, repeats=3)
+        toks = 4 * 64
+        emit(f"wallclock/train-step-{arch}-smoke", us_per_call=us,
+             derived=f"tok/s={toks/(us/1e6):.0f}")
+
+        params = models.init(jax.random.PRNGKey(0), cfg)
+        with mesh:
+            state_d = models.init_decode_state(cfg, 4, 32)
+            tok = jnp.zeros((4, 1), jnp.int32)
+
+            dec = jax.jit(
+                lambda p, s, t: models.decode_step(p, t, cfg, s, mesh=mesh))
+            us = _time(lambda: dec(params, state_d, tok)[0], repeats=3)
+        emit(f"wallclock/decode-step-{arch}-smoke", us_per_call=us,
+             derived=f"tok/s={4/(us/1e6):.0f}")

@@ -1,0 +1,55 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+sharded KV cache (the decode_* dry-run shapes run exactly this step).
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch qwen1.5-4b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as C
+from repro import models
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import serve_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = C.smoke(C.get_config(args.arch))  # CPU-sized same-family config
+    mesh = make_local_mesh()
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
+        jnp.int32)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.encoder_len, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.n_image_tokens, cfg.d_model)), jnp.float32)
+
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    t0 = time.perf_counter()
+    out = serve_batch(
+        cfg, mesh, params, prompts, gen_len=args.gen,
+        max_len=args.prompt_len + args.gen + 1, extras=extras)
+    dt = time.perf_counter() - t0
+    n = args.batch * args.gen
+    print(f"[serve_lm] {cfg.name}: {n} tokens in {dt:.2f}s "
+          f"({n/dt:.1f} tok/s incl. compile)")
+    for i in range(min(3, args.batch)):
+        print(f"  seq{i}: {np.asarray(out[i])[:16]}")
+
+
+if __name__ == "__main__":
+    main()

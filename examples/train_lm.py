@@ -1,0 +1,102 @@
+"""End-to-end training driver: train a ~100M-param LM on synthetic data.
+
+Demo (CPU-sized, ~2 min):
+  PYTHONPATH=src python examples/train_lm.py --steps 60
+
+Full deliverable run (~100M params, few hundred steps — hours on CPU,
+minutes on a TPU host):
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+Shows the whole stack: config -> sharded train step (balanced-GEMM
+substrate) -> synthetic pipeline -> async checkpointing -> straggler
+monitor -> resume.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import SyntheticLM, DataConfig
+from repro.ft import checkpoint as ckpt_lib
+from repro.ft.straggler import StragglerMonitor
+from repro.launch.mesh import make_local_mesh
+from repro.train.trainstep import make_train_step
+
+PRESETS = {
+    # ~15M params: quick CPU demo
+    "demo": ModelConfig(
+        name="demo-15m", family="dense", n_layers=4, d_model=256,
+        n_heads=4, n_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=8192,
+        attn_chunk=256, loss_chunk=128, remat=False,
+    ),
+    # ~100M params: the deliverable config
+    "100m": ModelConfig(
+        name="lm-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+        attn_chunk=512, loss_chunk=256,
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset].validate()
+    seq = args.seq or (128 if args.preset == "demo" else 512)
+    mesh = make_local_mesh()
+    art = make_train_step(cfg, mesh, global_batch=args.batch, seq_len=seq)
+    n_params = sum(
+        np.prod(l.shape) for l in jax.tree.leaves(art.state_shapes["params"]))
+    print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch={args.batch} seq={seq}, devices={len(jax.devices())}")
+
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=args.batch))
+    ckpt_dir = args.ckpt_dir or f"checkpoints/{cfg.name}"
+    ckpt = ckpt_lib.AsyncCheckpointer(ckpt_dir)
+    monitor = StragglerMonitor()
+
+    start = ckpt_lib.latest_step(ckpt_dir) or 0
+    with mesh:
+        if start:
+            print(f"[train_lm] resuming from step {start}")
+            state = ckpt_lib.restore(
+                ckpt_dir, start, art.state_shapes, art.state_shardings)
+        else:
+            state = art.init_fn(jax.random.PRNGKey(0))
+        first = last = None
+        for step, batch in data.batches(start):
+            if step >= args.steps:
+                break
+            b = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            state, metrics = art.step_fn(state, b)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            monitor.record(step, dt)
+            if first is None:
+                first = loss
+            last = loss
+            if step % 10 == 0:
+                print(f"  step {step:4d}  loss {loss:7.4f}  "
+                      f"{dt*1e3:7.1f} ms/step")
+            if (step + 1) % 50 == 0:
+                ckpt.save(state, step + 1)
+        ckpt.wait()
+        ckpt_lib.save(ckpt_dir, state, args.steps)
+    print(f"[train_lm] loss {first:.4f} -> {last:.4f} over "
+          f"{args.steps - start} steps"
+          + (" (decreased ✓)" if last < first else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""nemotron-4-15b — dense GQA, squared-ReLU (non-gated) FFN.
+[arXiv:2402.16819; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b", family="dense",
+    n_layers=32, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab_size=256000,
+    activation="relu2", gated_mlp=False,
+    microbatches=2,
+    source="[arXiv:2402.16819; unverified]",
+)

@@ -1,0 +1,25 @@
+"""The paper's primary contribution: balanced-point GEMM optimization.
+
+perfmodel.py   — analytical model (Eqs. 1–10, TPU constants, roofline terms)
+tiling.py      — multi-level TileConfig (intrinsic → block → array → problem)
+balance.py     — §4.5.1 single-core IP + §4.5.2 balanced-point iteration
+autotune.py    — measured-feedback driver (paper loop + neighbor hillclimb)
+gemm.py        — public balanced_gemm() with plan caching
+distributed.py — mesh-level output-stationary GEMM + K-sharded foil
+"""
+from repro.core.balance import solve_balanced, solve_single_core
+from repro.core.gemm import balanced_gemm, plan_for
+from repro.core.perfmodel import TPU_V5E, HardwareSpec, RooflineTerms, roofline_terms
+from repro.core.tiling import TileConfig
+
+__all__ = [
+    "TPU_V5E",
+    "HardwareSpec",
+    "RooflineTerms",
+    "TileConfig",
+    "balanced_gemm",
+    "plan_for",
+    "roofline_terms",
+    "solve_balanced",
+    "solve_single_core",
+]

@@ -1,0 +1,159 @@
+"""Measured-feedback tile autotuner.
+
+Wraps the §4.5.2 iterative procedure with a measurement callback and adds a
+generic neighbor-hillclimb refinement (the beyond-paper part): after the
+paper's bk-descent converges, probe the ±1-step neighborhood of the balanced
+plan. On hardware ``measure_fn`` is wall clock; on CPU it defaults to timing
+the XLA fallback (meaningful relative signal) or to the analytical model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import balance, perfmodel as pm
+from repro.kernels.matmul import LANE, SUBLANE, vmem_bytes
+from repro.kernels.ops import GemmPlan, balanced_matmul
+
+
+@dataclasses.dataclass
+class TuneRecord:
+    plan: GemmPlan
+    seconds: float
+    source: str  # 'paper-iteration' | 'hillclimb'
+
+
+@dataclasses.dataclass
+class TuneResult:
+    plan: GemmPlan
+    seconds: float
+    history: list[TuneRecord]
+
+
+def model_measure_fn(
+    M: int, K: int, N: int, *, hw=pm.TPU_V5E, in_dtype=jnp.bfloat16,
+    out_dtype=None, b_layout="row", m_rows=1, n_cols=1,
+) -> Callable[[GemmPlan], float]:
+    """Analytical-model 'measurement' (the CPU-container default)."""
+
+    def fn(plan: GemmPlan) -> float:
+        return pm.estimate_gemm(
+            hw, M, K, N, plan.bm, plan.bk, plan.bn, in_dtype=in_dtype,
+            out_dtype=out_dtype, b_layout=b_layout, m_rows=m_rows,
+            n_cols=n_cols,
+        ).t_total
+
+    return fn
+
+
+def wallclock_measure_fn(
+    M: int, K: int, N: int, *, in_dtype=jnp.bfloat16, out_dtype=None,
+    b_layout="row", backend="interpret", repeats=3,
+) -> Callable[[GemmPlan], float]:
+    """Wall-clock measurement via the kernel itself (TPU) or interpret mode."""
+    rng = np.random.default_rng(0)
+
+    def _mk(shape):
+        if jnp.issubdtype(jnp.dtype(in_dtype), jnp.integer):
+            return jnp.asarray(rng.integers(-100, 100, size=shape), in_dtype)
+        return jnp.asarray(rng.normal(size=shape), in_dtype)
+
+    a = _mk((M, K))
+    b = _mk((N, K) if b_layout == "col" else (K, N))
+
+    def fn(plan: GemmPlan) -> float:
+        out = balanced_matmul(
+            a, b, plan=plan, out_dtype=out_dtype, b_layout=b_layout,
+            backend=backend,
+        )
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                balanced_matmul(
+                    a, b, plan=plan, out_dtype=out_dtype, b_layout=b_layout,
+                    backend=backend,
+                )
+            )
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return fn
+
+
+def _neighbors(plan: GemmPlan, itemsize: int) -> list[GemmPlan]:
+    sub = SUBLANE[itemsize]
+    out = []
+    for dm in (-128, -sub, 0, sub, 128):
+        for dk in (-LANE, 0, LANE):
+            for dn in (-LANE, 0, LANE):
+                bm, bk, bn = plan.bm + dm, plan.bk + dk, plan.bn + dn
+                if bm >= sub and bk >= LANE and bn >= LANE:
+                    if (bm, bk, bn) != (plan.bm, plan.bk, plan.bn):
+                        out.append(GemmPlan(bm=bm, bk=bk, bn=bn))
+    return out
+
+
+def autotune(
+    M: int, K: int, N: int,
+    *,
+    hw: pm.HardwareSpec = pm.TPU_V5E,
+    in_dtype=jnp.bfloat16,
+    out_dtype=None,
+    b_layout: str = "row",
+    m_rows: int = 1,
+    n_cols: int = 1,
+    measure_fn: Callable[[GemmPlan], float] | None = None,
+    hillclimb_rounds: int = 3,
+    min_gain: float = 0.05,
+) -> TuneResult:
+    """Paper iteration (§4.5.2) + neighbor hillclimb refinement.
+
+    Stops the refinement after ``hillclimb_rounds`` consecutive rounds with
+    < ``min_gain`` relative improvement (the assignment's stopping rule).
+    """
+    if measure_fn is None:
+        measure_fn = model_measure_fn(
+            M, K, N, hw=hw, in_dtype=in_dtype, out_dtype=out_dtype,
+            b_layout=b_layout, m_rows=m_rows, n_cols=n_cols,
+        )
+    ty = jnp.dtype(in_dtype).itemsize
+    budget = hw.vmem_bytes
+
+    res = balance.solve_balanced(
+        M, K, N, hw=hw, in_dtype=in_dtype, out_dtype=out_dtype,
+        b_layout=b_layout, m_rows=m_rows, n_cols=n_cols,
+        measure_fn=measure_fn,
+    )
+    history = [
+        TuneRecord(plan=s.plan, seconds=s.t_total, source="paper-iteration")
+        for s in res.steps
+    ]
+    best_plan = res.plan
+    best_t = min(s.t_total for s in res.steps)
+
+    stale = 0
+    while stale < hillclimb_rounds:
+        round_best_plan, round_best_t = None, best_t
+        for cand in _neighbors(best_plan, ty):
+            ty_out = jnp.dtype(out_dtype or in_dtype).itemsize
+            if vmem_bytes(cand.bm, cand.bk, cand.bn, ty, ty_out) > budget:
+                continue
+            t = measure_fn(cand)
+            history.append(TuneRecord(plan=cand, seconds=t, source="hillclimb"))
+            if t < round_best_t:
+                round_best_plan, round_best_t = cand, t
+        if round_best_plan is None or (best_t - round_best_t) / best_t < min_gain:
+            stale += 1
+            if round_best_plan is not None and round_best_t < best_t:
+                best_plan, best_t = round_best_plan, round_best_t
+        else:
+            stale = 0
+            best_plan, best_t = round_best_plan, round_best_t
+    return TuneResult(plan=best_plan, seconds=best_t, history=history)

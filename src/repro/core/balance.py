@@ -1,0 +1,275 @@
+"""Balanced-point tile optimization — the paper's §4.5, TPU-adapted.
+
+Two solvers, mirroring the paper exactly:
+
+``solve_single_core``  (§4.5.1)
+    Exhaustive IP over (bm, bk, bn) subject to the VMEM capacity constraint
+    (Eq. 5) and the compute-bound constraint (Eq. 4). Primary objective:
+    maximize MACs ``bm·bk·bn`` (data reuse); secondary: minimize ``bm·bn``
+    (accumulator traffic / bank-conflict stalls). This yields the
+    compute-optimal kernel — high bk, small bm/bn — which the paper then
+    shows is *memory-bound end-to-end* (§5.2.1).
+
+``solve_balanced``  (§4.5.2)
+    The system-level iteration: start from the single-core solution, verify
+    the full GEMM is memory-bound, then repeatedly *decrease bk* and re-solve
+    the IP with bk fixed and the objective flipped to maximize ``bm·bn``
+    (cutting Eqs. 6–7 DRAM traffic with the smallest possible compute
+    sacrifice). Stop when modeled/measured performance drops: the previous
+    iterate is the balanced point T_comp ≈ T_mem.
+
+On hardware the per-iteration evaluation is a wall-clock measurement; in this
+container it defaults to the analytical model (callers may inject
+``measure_fn`` — the autotuner does, see autotune.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import perfmodel as pm
+from repro.kernels.matmul import LANE, SUBLANE, vmem_bytes
+from repro.kernels.ops import GemmPlan
+
+
+def _candidates(dim_aligned: Sequence[int]) -> list[int]:
+    return sorted(set(dim_aligned))
+
+
+def candidate_blocks(itemsize: int, *, max_bm=1024, max_bk=8192, max_bn=2048):
+    """Enumerate hardware-aligned candidate block dims.
+
+    bm may drop to the sublane granularity (skinny-M GEMMs); bk/bn stay
+    multiples of the 128-lane so HBM runs and MXU passes stay aligned —
+    the "multiples of r, s, t" constraint of §4.5.1.
+    """
+    sub = SUBLANE[itemsize]
+    bms = _candidates(
+        [sub, 2 * sub, 4 * sub, 64]
+        + list(range(128, max_bm + 1, 128))
+    )
+    bks = _candidates(list(range(128, max_bk + 1, 128)))
+    bns = _candidates(list(range(128, max_bn + 1, 128)))
+    return bms, bks, bns
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    plan: GemmPlan
+    eff: float              # modeled kernel efficiency
+    macs: int               # bm·bk·bn, the §4.5.1 primary objective
+    vmem: int               # Eq. 5 working set, bytes
+    compute_bound: bool     # Eq. 4 satisfied
+
+
+def solve_single_core(
+    *,
+    hw: pm.HardwareSpec = pm.TPU_V5E,
+    in_dtype=jnp.bfloat16,
+    out_dtype=None,
+    b_layout: str = "row",
+    vmem_budget: int | None = None,
+) -> SolveResult:
+    """§4.5.1: the compute-optimal kernel (max MACs, then min bm·bn)."""
+    if out_dtype is None:
+        out_dtype = in_dtype
+    ty_in = jnp.dtype(in_dtype).itemsize
+    ty_out = jnp.dtype(out_dtype).itemsize
+    budget = vmem_budget or hw.vmem_bytes
+    bms, bks, bns = candidate_blocks(ty_in)
+
+    best: tuple | None = None
+    fallback: tuple | None = None  # best tile ignoring Eq. 4 (tiny budgets)
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                v = vmem_bytes(bm, bk, bn, ty_in, ty_out)
+                if v > budget:
+                    break  # bk ascending: larger only grows v
+                key = (bm * bk * bn, -(bm * bn))  # max MACs, then min bm·bn
+                if fallback is None or key > fallback[0]:
+                    fallback = (key, bm, bk, bn, v)
+                bt = pm.block_times(
+                    hw, bm, bk, bn, in_dtype=in_dtype, b_layout=b_layout
+                )
+                if not bt.compute_bound:  # Eq. 4
+                    continue
+                if best is None or key > best[0]:
+                    best = (key, bm, bk, bn, v)
+    compute_bound = best is not None
+    if best is None:
+        # Budget too small for any compute-bound tile (can happen for
+        # L1-sized budgets on TPU BW ratios): degrade gracefully to the
+        # max-MACs tile — still the paper's primary objective.
+        best = fallback
+    if best is None:
+        raise ValueError("no feasible tile under the VMEM budget")
+    _, bm, bk, bn, v = best
+    eff = pm.kernel_efficiency(hw, bm, bk, bn, in_dtype=in_dtype, b_layout=b_layout)
+    return SolveResult(
+        plan=GemmPlan(bm=bm, bk=bk, bn=bn), eff=eff, macs=bm * bk * bn,
+        vmem=v, compute_bound=compute_bound,
+    )
+
+
+def _solve_fixed_bk(
+    bk: int,
+    *,
+    hw: pm.HardwareSpec,
+    ty_in: int,
+    ty_out: int,
+    in_dtype,
+    b_layout: str,
+    budget: int,
+) -> GemmPlan | None:
+    """Inner IP of the §4.5.2 iteration: bk fixed, maximize bm·bn."""
+    bms, _, bns = candidate_blocks(ty_in)
+    best = None
+    for bm in bms:
+        for bn in bns:
+            if vmem_bytes(bm, bk, bn, ty_in, ty_out) > budget:
+                continue
+            bt = pm.block_times(hw, bm, bk, bn, in_dtype=in_dtype, b_layout=b_layout)
+            if not bt.compute_bound:
+                continue
+            key = (bm * bn, bm * bk * bn)
+            if best is None or key > best[0]:
+                best = (key, bm, bn)
+    if best is None:
+        return None
+    _, bm, bn = best
+    return GemmPlan(bm=bm, bk=bk, bn=bn)
+
+
+@dataclasses.dataclass(frozen=True)
+class BalanceStep:
+    """One §4.5.2 iteration record (the EXPERIMENTS.md §Perf raw material)."""
+
+    plan: GemmPlan
+    t_comp: float
+    t_mem: float
+    t_total: float
+    tops: float
+
+
+@dataclasses.dataclass(frozen=True)
+class BalanceResult:
+    plan: GemmPlan
+    steps: list[BalanceStep]
+    tops: float
+
+    @property
+    def balanced(self) -> bool:
+        final = self.steps[-1] if self.steps else None
+        return final is not None
+
+
+def solve_balanced(
+    M: int, K: int, N: int,
+    *,
+    hw: pm.HardwareSpec = pm.TPU_V5E,
+    in_dtype=jnp.bfloat16,
+    out_dtype=None,
+    b_layout: str = "row",
+    m_rows: int = 1,
+    n_cols: int = 1,
+    vmem_budget: int | None = None,
+    measure_fn: Callable[[GemmPlan], float] | None = None,
+) -> BalanceResult:
+    """§4.5.2: walk bk down from the compute-optimal kernel to the balanced
+    point. ``measure_fn(plan) -> seconds`` replaces the model when provided
+    (the on-hardware procedure); iteration stops at the first perf drop.
+    """
+    if out_dtype is None:
+        out_dtype = in_dtype
+    ty_in = jnp.dtype(in_dtype).itemsize
+    ty_out = jnp.dtype(out_dtype).itemsize
+    budget = vmem_budget or hw.vmem_bytes
+
+    def evaluate(plan: GemmPlan) -> BalanceStep:
+        est = pm.estimate_gemm(
+            hw, M, K, N, plan.bm, plan.bk, plan.bn,
+            in_dtype=in_dtype, out_dtype=out_dtype, b_layout=b_layout,
+            m_rows=m_rows, n_cols=n_cols,
+        )
+        t_total = measure_fn(plan) if measure_fn is not None else est.t_total
+        return BalanceStep(
+            plan=plan, t_comp=est.t_comp, t_mem=est.t_mem, t_total=t_total,
+            tops=2.0 * M * K * N / t_total / 1e12,
+        )
+
+    start = solve_single_core(
+        hw=hw, in_dtype=in_dtype, out_dtype=out_dtype, b_layout=b_layout,
+        vmem_budget=budget,
+    )
+    steps = [evaluate(start.plan)]
+    bk = start.plan.bk
+    drops = 0
+    last_mn = steps[-1].plan.bm * steps[-1].plan.bn
+    while bk > LANE and drops < 3:
+        bk -= LANE
+        plan = _solve_fixed_bk(
+            bk, hw=hw, ty_in=ty_in, ty_out=ty_out, in_dtype=in_dtype,
+            b_layout=b_layout, budget=budget,
+        )
+        if plan is None:
+            continue
+        if plan.bm * plan.bn <= last_mn:
+            continue  # smaller bk must buy a larger output tile to matter
+        last_mn = plan.bm * plan.bn
+        step = evaluate(plan)
+        best_t = min(s.t_total for s in steps)
+        steps.append(step)
+        # §4.5.2 stops at the first drop; we allow 3 consecutive
+        # non-improving probes (the model's tile landscape is bumpier than
+        # wall clock — discontinuous IP jumps) before declaring the knee.
+        drops = drops + 1 if step.t_total > best_t else 0
+    best = min(steps, key=lambda s: s.t_total)
+    return BalanceResult(plan=best.plan, steps=steps, tops=best.tops)
+
+
+def solve_exhaustive(
+    M: int, K: int, N: int,
+    *,
+    hw: pm.HardwareSpec = pm.TPU_V5E,
+    in_dtype=jnp.bfloat16,
+    out_dtype=None,
+    b_layout: str = "row",
+    m_rows: int = 1,
+    n_cols: int = 1,
+    vmem_budget: int | None = None,
+) -> BalanceResult:
+    """Beyond-paper optimizer: exhaustively evaluate the modeled end-to-end
+    time of *every* feasible tile (a few thousand candidates). The paper's
+    iterative walk (§4.5.2) exists because each probe costs a 5-minute
+    hardware compile; with an analytical model the full sweep is free and
+    immune to the walk's local optima.
+    """
+    if out_dtype is None:
+        out_dtype = in_dtype
+    ty_in = jnp.dtype(in_dtype).itemsize
+    ty_out = jnp.dtype(out_dtype).itemsize
+    budget = vmem_budget or hw.vmem_bytes
+    bms, bks, bns = candidate_blocks(ty_in)
+    best: BalanceStep | None = None
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                if vmem_bytes(bm, bk, bn, ty_in, ty_out) > budget:
+                    break
+                est = pm.estimate_gemm(
+                    hw, M, K, N, bm, bk, bn, in_dtype=in_dtype,
+                    out_dtype=out_dtype, b_layout=b_layout,
+                    m_rows=m_rows, n_cols=n_cols,
+                )
+                if best is None or est.t_total < best.t_total:
+                    best = BalanceStep(
+                        plan=GemmPlan(bm=bm, bk=bk, bn=bn),
+                        t_comp=est.t_comp, t_mem=est.t_mem,
+                        t_total=est.t_total,
+                        tops=2.0 * M * K * N / est.t_total / 1e12,
+                    )
+    assert best is not None
+    return BalanceResult(plan=best.plan, steps=[best], tops=best.tops)

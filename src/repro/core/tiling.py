@@ -1,0 +1,92 @@
+"""Multi-level tiling descriptor — the paper's Fig. 3a, TPU-adapted.
+
+Four levels on XDNA collapse to three on TPU (no L2 MemTile tier):
+
+  level 1  intrinsic  — MXU native tile (lane=128, sublane per dtype);
+                        the paper's r×s×t
+  level 2  block      — VMEM-resident (bm, bk, bn); the paper's
+                        m_ct×k_ct×n_ct, with bk doubling as k_mt (contiguity)
+  level 3  grid/array — spatial parallelization (m_rows × n_cols) over mesh
+                        devices plus the sequential grid over the problem
+  level 4  problem    — the full M×K×N
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels.matmul import LANE, SUBLANE, vmem_bytes
+from repro.kernels.ops import GemmPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Fully-resolved multi-level tiling of one GEMM."""
+
+    M: int
+    K: int
+    N: int
+    plan: GemmPlan
+    in_dtype: str = "bfloat16"
+    out_dtype: str = "bfloat16"
+    m_rows: int = 1   # spatial parallelism over M (mesh 'data' extent)
+    n_cols: int = 1   # spatial parallelism over N (mesh 'model' extent)
+
+    # ---- level 1: intrinsic
+    @property
+    def intrinsic(self) -> tuple[int, int, int]:
+        sub = SUBLANE[jnp.dtype(self.in_dtype).itemsize]
+        return (sub, LANE, LANE)
+
+    # ---- level 2: block
+    @property
+    def block(self) -> tuple[int, int, int]:
+        return (self.plan.bm, self.plan.bk, self.plan.bn)
+
+    def vmem_working_set(self) -> int:
+        ty_in = jnp.dtype(self.in_dtype).itemsize
+        ty_out = jnp.dtype(self.out_dtype).itemsize
+        return vmem_bytes(self.plan.bm, self.plan.bk, self.plan.bn, ty_in, ty_out)
+
+    # ---- level 3: array / grid
+    @property
+    def native_size(self) -> tuple[int, int, int]:
+        """The paper's native GEMM size: (m_ct·m_rows) × k_mt × (n_ct·n_cols)."""
+        return (
+            self.plan.bm * self.m_rows,
+            self.plan.bk,
+            self.plan.bn * self.n_cols,
+        )
+
+    @property
+    def padded(self) -> tuple[int, int, int]:
+        nm, nk, nn = self.native_size
+        r = lambda x, b: -(-x // b) * b
+        return r(self.M, nm), r(self.K, nk), r(self.N, nn)
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        """Per-device sequential grid (i, j, k) — the pallas_call grid."""
+        Mp, Kp, Np = self.padded
+        return (
+            Mp // (self.plan.bm * self.m_rows),
+            Np // (self.plan.bn * self.n_cols),
+            Kp // self.plan.bk,
+        )
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of padded FLOPs that are zero-padding overhead."""
+        Mp, Kp, Np = self.padded
+        return 1.0 - (self.M * self.K * self.N) / (Mp * Kp * Np)
+
+    def validate(self) -> "TileConfig":
+        r, s, t = self.intrinsic
+        bm, bk, bn = self.block
+        if bm % r or bk % s or bn % t:
+            raise ValueError(
+                f"block {self.block} not aligned to intrinsic {self.intrinsic}"
+            )
+        return self

@@ -1,0 +1,152 @@
+"""Sharded checkpointing: atomic, async, resharding-friendly.
+
+Layout: ``<dir>/step_<N>/`` containing one ``.npy`` per leaf (path-encoded
+filenames) + ``manifest.json`` (treedef, shapes, dtypes, step). Writes go to
+``step_<N>.tmp`` and are atomically renamed — a crash mid-write never
+corrupts the latest checkpoint (restart-safety). ``AsyncCheckpointer``
+snapshots to host memory synchronously (cheap) and writes on a background
+thread so the train loop never blocks on disk.
+
+Restore takes *target shardings*, so a checkpoint written on one mesh can be
+restored onto a different device count/topology — the elastic-rescale path
+(ft/elastic.py) is just restore-with-new-shardings.
+
+Single-process note: on a multi-host deployment each process would write its
+addressable shards (same layout, per-process subdir); this container is
+single-process so arrays are fully addressable and written whole.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _safe_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return _SEP.join(re.sub(r"[^\w.\-]", "_", x) for x in parts)
+
+
+def save(ckpt_dir: str, state: Any, step: int) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    return _write_host_state(ckpt_dir, host_state, step)
+
+
+def _write_host_state(ckpt_dir: str, host_state: Any, step: int) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(host_state)[0]
+    manifest = {"step": step, "leaves": []}
+    for path, leaf in leaves:
+        key = _safe_key(path)
+        to_write = leaf
+        if str(leaf.dtype) == "bfloat16":
+            # numpy cannot round-trip ml_dtypes; bf16 -> f32 is exact
+            # (widening) and restore() casts back bit-exactly.
+            to_write = leaf.astype(np.float32)
+        np.save(os.path.join(tmp, key + ".npy"), to_write,
+                allow_pickle=False)
+        manifest["leaves"].append(
+            {"key": key, "shape": list(leaf.shape), "dtype": str(leaf.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep=3)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, shardings: Any | None = None):
+    """Restore into the structure of ``like`` (a state tree or eval_shape of
+    one). ``shardings`` (same structure) places leaves — pass the *target*
+    mesh's shardings to reshard elastically."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (
+        jax.tree.leaves(shardings, is_leaf=lambda s: hasattr(s, "mesh"))
+        if shardings is not None else [None] * len(leaves)
+    )
+    out = []
+    for (path, leaf), sh in zip(leaves, shard_leaves):
+        arr = np.load(os.path.join(src, _safe_key(path) + ".npy"))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {_safe_key(path)} shape {arr.shape} != "
+                f"expected {leaf.shape}")
+        arr = arr.astype(jax.numpy.dtype(leaf.dtype))
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree.unflatten(jax.tree.structure(like), out)
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, persist on a background thread."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, state: Any, step: int) -> None:
+        self.wait()  # one in-flight write at a time
+        host_state = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), state)
+
+        def _run():
+            try:
+                _write_host_state(self.ckpt_dir, host_state, step)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

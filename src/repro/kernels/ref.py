@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each ``*_ref`` function defines the *semantics* a kernel must reproduce
+bit-for-bit at f32/i32 accumulation precision. Tests sweep shapes/dtypes and
+``assert_allclose`` kernel output against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INT_TYPES = (jnp.int8, jnp.int16, jnp.int32)
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def saturating_cast(x: jax.Array, dtype) -> jax.Array:
+    """Cast from the accumulator type to ``dtype``, saturating for ints.
+
+    Mirrors the paper's int8 -> int8/int16 "precision reduction" (§5.1): the
+    accumulator is full-precision (i32) and the stored output is clipped.
+    """
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.clip(x, info.min, info.max).astype(dtype)
+    return x.astype(dtype)
+
+
+def matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    out_dtype=None,
+    b_layout: str = "row",
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+) -> jax.Array:
+    """Oracle GEMM: C = act(A @ B + bias), cast to ``out_dtype``.
+
+    ``b_layout='col'`` means ``b`` is stored as (N, K) — i.e. B^T — matching
+    the paper's column-major B option. The contraction is then over b's last
+    axis (the in-register-transpose analog of the AIE shuffle path).
+    """
+    acc = _acc_dtype(a.dtype)
+    if out_dtype is None:
+        out_dtype = a.dtype
+    if b_layout == "col":
+        dim_nums = (((1,), (1,)), ((), ()))
+    elif b_layout == "row":
+        dim_nums = (((1,), (0,)), ((), ()))
+    else:
+        raise ValueError(f"b_layout must be 'row' or 'col', got {b_layout!r}")
+    out = jax.lax.dot_general(a, b, dim_nums, preferred_element_type=acc)
+    if bias is not None:
+        out = out + bias.astype(acc)
+    if activation is not None:
+        out = apply_activation(out, activation)
+    return saturating_cast(out, out_dtype)
+
+
+def apply_activation(x: jax.Array, name: str) -> jax.Array:
+    if name == "none":
+        return x
+    if name == "relu":
+        return jnp.maximum(x, 0)
+    if name == "relu2":  # squared ReLU (nemotron-4)
+        r = jnp.maximum(x, 0)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def gemv_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    out_dtype=None,
+    w_layout: str = "row",
+) -> jax.Array:
+    """Oracle decode-time matvec: (B, K) @ (K, N) with small B.
+
+    The paper defers GEMV to future work (§5.3.4); we implement it as the
+    decode-step kernel, so the oracle lives here too.
+    """
+    return matmul_ref(x, w, out_dtype=out_dtype, b_layout=w_layout)

@@ -1,0 +1,206 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init): the dry-run — and only the dry-run — sees 512
+placeholder CPU devices so ``make_production_mesh`` can build the real
+meshes (16×16 single-pod, 2×16×16 multi-pod).
+
+Per cell this produces:
+  * ``compiled.memory_analysis()``  — per-device bytes: proves it fits HBM;
+  * ``cost_analysis()``             — XLA aggregate (scan bodies counted once);
+  * ``repro.roofline.hlo.analyze``  — loop-aware per-device FLOPs / bytes /
+    collective bytes (the §Roofline source);
+  * wall compile time + HLO size.
+
+Results are written as JSON under ``experiments/dryrun/`` and summarized in
+EXPERIMENTS.md. Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro import models
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import sharding as shd
+from repro.roofline import hlo as hlo_lib
+from repro.train import servestep, trainstep
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def input_specs(cfg, shape, mesh):
+    """ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+    shardable, no device allocation."""
+    if shape.kind == "train":
+        shapes = trainstep.input_shapes(cfg, shape.global_batch, shape.seq_len)
+        specs = shd.batch_specs(shapes, mesh)
+        return jax.tree.map(
+            lambda s, p: jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=jax.sharding.NamedSharding(mesh, p)),
+            shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if shape.kind == "prefill":
+        shapes = servestep.prefill_input_shapes(
+            cfg, shape.global_batch, shape.seq_len)
+        specs = shd.batch_specs(shapes, mesh)
+        return jax.tree.map(
+            lambda s, p: jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=jax.sharding.NamedSharding(mesh, p)),
+            shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    # decode: one new token
+    return {"tokens": jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32)}
+
+
+def _with_shardings(shapes, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Build + lower + compile one cell. Returns the result record."""
+    cfg = C.get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": int(chips),
+        "kind": shape.kind, "status": "ok",
+    }
+    t0 = time.time()
+
+    if shape.kind == "train":
+        art = trainstep.make_train_step(
+            cfg, mesh, global_batch=shape.global_batch, seq_len=shape.seq_len)
+        state_in = _with_shardings(art.state_shapes, art.state_shardings)
+        batch_in = input_specs(cfg, shape, mesh)
+        with mesh:
+            lowered = art.step_fn.lower(state_in, batch_in)
+    elif shape.kind == "prefill":
+        art = servestep.make_serve_step(
+            cfg, mesh, batch=shape.global_batch, max_len=shape.seq_len)
+        params_in = _with_shardings(
+            jax.eval_shape(lambda: models.init(jax.random.PRNGKey(0), cfg)),
+            art.param_shardings)
+        state_in = _with_shardings(art.state_shapes, art.state_shardings)
+        batch_in = input_specs(cfg, shape, mesh)
+        with mesh:
+            lowered = art.prefill_fn.lower(params_in, state_in, batch_in)
+    else:  # decode
+        art = servestep.make_serve_step(
+            cfg, mesh, batch=shape.global_batch, max_len=shape.seq_len,
+            with_prefill=False)
+        params_in = _with_shardings(
+            jax.eval_shape(lambda: models.init(jax.random.PRNGKey(0), cfg)),
+            art.param_shardings)
+        state_in = _with_shardings(art.state_shapes, art.state_shardings)
+        tok_in = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        with mesh:
+            lowered = art.decode_fn.lower(params_in, state_in, tok_in)
+
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    print(ma)
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_per_device_gib": round(
+            (ma.argument_size_in_bytes + ma.output_size_in_bytes
+             + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+    }
+    ca = compiled.cost_analysis()
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    rec["xla_cost"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+    t0 = time.time()
+    hc = hlo_lib.analyze(compiled.as_text())
+    rec["analyze_s"] = round(time.time() - t0, 2)
+    rec["hlo"] = {
+        "flops_per_device": hc.flops,
+        "bytes_per_device": hc.bytes,
+        "collective_bytes_per_device": hc.collective_bytes,
+        "by_collective": dict(hc.by_collective),
+        "unknown_trip_loops": hc.unknown_trip_loops,
+    }
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str):
+    cfg = C.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_tag = "multi" if multi_pod else "single"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "skipped", "reason": why}
+    else:
+        try:
+            rec = lower_cell(arch, shape_name, multi_pod)
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-4000:]}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[{rec['status']:>7}] {arch} × {shape_name} × {mesh_tag} "
+          f"compile={rec.get('compile_s', '-')}s "
+          f"peak={rec.get('memory', {}).get('peak_per_device_gib', '-')}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    archs = C.list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                rec = run_cell(arch, shape_name, multi, args.out)
+                failures += rec["status"] == "error"
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Batched serving driver: continuous-batching-style prefill + decode loop.
+
+Requests arrive with different prompt lengths; the server right-pads to the
+batch maximum, prefills once, then decodes step-by-step with the sharded KV
+cache. Greedy sampling (deterministic; good for tests/examples).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
+      --batch 4 --prompt-len 12 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as C
+from repro import models
+from repro.data.synthetic import batch_for
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.layers import common as cm
+from repro.train.servestep import make_serve_step
+
+
+def serve_batch(cfg, mesh, params, prompts, *, gen_len: int, max_len: int,
+                extras=None):
+    """prompts: (B, P) int32. Returns (B, gen_len) generated ids."""
+    B = prompts.shape[0]
+    art = make_serve_step(cfg, mesh, batch=B, max_len=max_len)
+    with mesh:
+        state = jax.jit(
+            lambda: models.init_decode_state(cfg, B, max_len),
+            out_shardings=art.state_shardings)()
+        batch_in = {"tokens": prompts, **(extras or {})}
+        logits, state = art.prefill_fn(params, state, batch_in)
+        out = []
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        for _ in range(gen_len):
+            out.append(tok)
+            logits, state = art.decode_fn(params, state, tok[:, None])
+            tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--matmul-backend", default="xla")
+    args = ap.parse_args()
+
+    cm.set_matmul_backend(args.matmul_backend)
+    cfg = C.get_config(args.arch)
+    if args.smoke:
+        cfg = C.smoke(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh())
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
+        jnp.int32)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.encoder_len, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.n_image_tokens, cfg.d_model)), jnp.float32)
+
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    t0 = time.perf_counter()
+    out = serve_batch(cfg, mesh, params, prompts,
+                      gen_len=args.gen,
+                      max_len=args.prompt_len + args.gen + 1,
+                      extras=extras)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.gen
+    print(f"[serve] arch={cfg.name} generated {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print("first row:", np.asarray(out[0])[:12], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Neural-net layer library; every matmul routes through the balanced-GEMM
+substrate (repro.core.gemm) — the paper's technique as a first-class layer."""

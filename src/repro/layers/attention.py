@@ -1,0 +1,329 @@
+"""Attention layers: GQA self-attention (train/prefill/decode), cross-attention.
+
+Memory posture: full-sequence training/prefill uses an online-softmax scan
+over KV chunks (``chunked_attention``) so the S×S score matrix is never
+materialized — the pure-JAX flash-attention formulation. Decode attends one
+query against the whole KV cache (linear per step).
+
+All projections route through :func:`repro.layers.common.dense` — i.e. the
+paper's balanced-GEMM substrate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as cm
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array           # (d, H*Dh)
+    wk: jax.Array           # (d, Hkv*Dh)
+    wv: jax.Array           # (d, Hkv*Dh)
+    wo: jax.Array           # (H*Dh, d)
+    bq: jax.Array | None
+    bk: jax.Array | None
+    bv: jax.Array | None
+
+
+def init_attn(key, d_model, n_heads, n_kv_heads, head_dim, *, qkv_bias=False,
+              dtype=jnp.float32):
+    ks = cm.split_keys(key, 4)
+    q_dim, kv_dim = n_heads * head_dim, n_kv_heads * head_dim
+    zeros = lambda n: jnp.zeros((n,), dtype)
+    return AttnParams(
+        wq=cm.normal_init(ks[0], (d_model, q_dim), dtype),
+        wk=cm.normal_init(ks[1], (d_model, kv_dim), dtype),
+        wv=cm.normal_init(ks[2], (d_model, kv_dim), dtype),
+        wo=cm.normal_init(ks[3], (q_dim, d_model), dtype),
+        bq=zeros(q_dim) if qkv_bias else None,
+        bk=zeros(kv_dim) if qkv_bias else None,
+        bv=zeros(kv_dim) if qkv_bias else None,
+    )
+
+
+def attn_axes(qkv_bias=False):
+    """Logical sharding axes mirroring AttnParams."""
+    return AttnParams(
+        wq=("embed", "heads"), wk=("embed", "kv"), wv=("embed", "kv"),
+        wo=("heads", "embed"),
+        bq=("heads",) if qkv_bias else None,
+        bk=("kv",) if qkv_bias else None,
+        bv=("kv",) if qkv_bias else None,
+    )
+
+
+def _attn_mode(n_heads: int, seq: int) -> str:
+    """How to parallelize attention activations over the 'model' axis.
+
+    'heads'  — classic TP: heads divide the model axis;
+    'seq'    — context parallelism: heads don't divide (qwen 20H, arctic 56H,
+               whisper 8H on a 16-way axis) but the query sequence does;
+    'none'   — tiny shapes (smoke tests).
+    """
+    tp = cm.axis_size("model")
+    if tp <= 1:
+        return "none"
+    if n_heads % tp == 0:
+        return "heads"
+    if seq % tp == 0:
+        return "seq"
+    return "none"
+
+
+def _hint_qkv(q, k, v):
+    """Apply activation sharding to (B, S, H, D) q/k/v (post repeat_kv)."""
+    mode = _attn_mode(q.shape[2], q.shape[1])
+    if mode == "heads":
+        q = cm.hint(q, "dp", None, "model", None)
+        k = cm.hint(k, "dp", None, "model", None)
+        v = cm.hint(v, "dp", None, "model", None)
+    elif mode == "seq":
+        # context parallel: queries sharded along S; KV replicated over model
+        q = cm.hint(q, "dp", "model", None, None)
+        k = cm.hint(k, "dp", None, None, None)
+        v = cm.hint(v, "dp", None, None, None)
+    return q, k, v
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D)."""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(
+        x[:, :, :, None, :], (b, s, h, n_rep, d)
+    ).reshape(b, s, h * n_rep, d)
+
+
+def plain_attention(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Reference attention, materializes scores. q: (B,Sq,H,D), k/v (B,Sk,H,D)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * jnp.asarray(scale, q.dtype), k,
+                   preferred_element_type=jnp.float32)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                      q_offset: int = 0):
+    """Online-softmax attention, scanning KV chunks (flash formulation).
+
+    Never materializes more than (B, H, Sq, chunk) scores. Exact (up to f32
+    accumulation order) vs plain_attention.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if Sk % chunk:
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpad_mask = jnp.arange(Sk + pad) < Sk
+    else:
+        kpad_mask = None
+    n_chunks = k.shape[1] // chunk
+    scale = D ** -0.5
+    qf = q * jnp.asarray(scale, q.dtype)
+    kc = k.reshape(B, n_chunks, chunk, H, D)
+    vc = v.reshape(B, n_chunks, chunk, H, D)
+    mode = _attn_mode(H, Sq)
+    carry_spec = {
+        "heads": ("dp", "model", None, None),
+        "seq": ("dp", None, "model", None),
+        "none": ("dp", None, None, None),
+    }[mode]  # carries are (B, H, Sq, ...)
+
+    qpos = jnp.arange(Sq) + q_offset
+
+    def body(carry, inp):
+        o, m, l = carry
+        idx, kb, vb = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb,
+                       preferred_element_type=jnp.float32)
+        s = cm.hint(s, *carry_spec)
+        kpos = idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask = qpos[:, None] >= kpos[None, :]
+        if kpad_mask is not None:
+            mask = mask & (kpos < Sk)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        o_new = cm.hint(o_new, *carry_spec)
+        return (o_new, m_new, l_new), None
+
+    o0 = cm.hint(jnp.zeros((B, H, Sq, D), jnp.float32), *carry_spec)
+    m0 = cm.hint(jnp.full((B, H, Sq), NEG_INF, jnp.float32), *carry_spec[:3])
+    l0 = cm.hint(jnp.zeros((B, H, Sq), jnp.float32), *carry_spec[:3])
+    (o, m, l), _ = jax.lax.scan(
+        jax.checkpoint(body), (o0, m0, l0),
+        (jnp.arange(n_chunks), kc.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4)),
+    )
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention_core(q, k, v, *, causal: bool, chunk: int | None,
+                   q_offset: int = 0):
+    if chunk is not None and k.shape[1] > chunk:
+        return chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                 q_offset=q_offset)
+    return plain_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def self_attention(
+    p: AttnParams,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+    causal: bool = True,
+    chunk: int | None = 1024,
+    positions: jax.Array | None = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full-sequence GQA self-attention (training / prefill without cache)."""
+    B, S, _ = x.shape
+    q = cm.dense(x, p.wq, p.bq).reshape(B, S, n_heads, head_dim)
+    k = cm.dense(x, p.wk, p.bk).reshape(B, S, n_kv_heads, head_dim)
+    v = cm.dense(x, p.wv, p.bv).reshape(B, S, n_kv_heads, head_dim)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        sin, cos = cm.rotary_embedding(positions, head_dim, rope_theta)
+        q = cm.apply_rotary(q, sin, cos)
+        k = cm.apply_rotary(k, sin, cos)
+    k = _repeat_kv(k, n_heads // n_kv_heads)
+    v = _repeat_kv(v, n_heads // n_kv_heads)
+    q, k, v = _hint_qkv(q, k, v)
+    o = attention_core(q, k, v, causal=causal, chunk=chunk)
+    return cm.dense(o.reshape(B, S, n_heads * head_dim), p.wo)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S_max, Hkv, Dh)
+    v: jax.Array      # (B, S_max, Hkv, Dh)
+    length: jax.Array  # scalar int32: valid prefix length
+
+
+def init_kv_cache(batch, max_len, n_kv_heads, head_dim, dtype=jnp.bfloat16):
+    shape = (batch, max_len, n_kv_heads, head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill_attention(
+    p: AttnParams, x: jax.Array, cache: KVCache, **kw
+) -> tuple[jax.Array, KVCache]:
+    """Prefill: full self-attention + populate the KV cache prefix."""
+    B, S, _ = x.shape
+    n_kv, hd = cache.k.shape[2], cache.k.shape[3]
+    q = cm.dense(x, p.wq, p.bq).reshape(B, S, -1, hd)
+    k = cm.dense(x, p.wk, p.bk).reshape(B, S, n_kv, hd)
+    v = cm.dense(x, p.wv, p.bv).reshape(B, S, n_kv, hd)
+    if kw.get("use_rope", True):
+        sin, cos = cm.rotary_embedding(
+            jnp.arange(S)[None, :], hd, kw.get("rope_theta", 10000.0)
+        )
+        q = cm.apply_rotary(q, sin, cos)
+        k = cm.apply_rotary(k, sin, cos)
+    new_cache = KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), 0, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), 0, axis=1),
+        length=jnp.asarray(S, jnp.int32),
+    )
+    n_heads = q.shape[2]
+    kr = _repeat_kv(k, n_heads // n_kv)
+    vr = _repeat_kv(v, n_heads // n_kv)
+    q, kr, vr = _hint_qkv(q, kr, vr)
+    o = attention_core(q, kr, vr, causal=True, chunk=kw.get("chunk", 1024))
+    return cm.dense(o.reshape(B, S, -1), p.wo), new_cache
+
+
+def decode_attention(
+    p: AttnParams, x: jax.Array, cache: KVCache, *,
+    rope_theta: float = 10000.0, use_rope: bool = True,
+) -> tuple[jax.Array, KVCache]:
+    """One decode step: x (B, 1, d) against the cache; append the new KV.
+
+    The score einsum contracts against the full cache; invalid (future)
+    slots are masked by position. With the cache sequence dim sharded over
+    the mesh 'data' axis (long_500k), GSPMD turns the masked softmax into
+    the distributed flash-decode combine (partial max/sum + all-reduce).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    n_kv, hd = cache.k.shape[2], cache.k.shape[3]
+    q = cm.dense(x, p.wq, p.bq).reshape(B, 1, -1, hd)
+    k = cm.dense(x, p.wk, p.bk).reshape(B, 1, n_kv, hd)
+    v = cm.dense(x, p.wv, p.bv).reshape(B, 1, n_kv, hd)
+    pos = cache.length
+    if use_rope:
+        sin, cos = cm.rotary_embedding(
+            pos[None, None].astype(jnp.float32), hd, rope_theta
+        )
+        q = cm.apply_rotary(q, sin, cos)
+        k = cm.apply_rotary(k, sin, cos)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k.astype(cache.k.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v.astype(cache.v.dtype), pos, axis=1)
+    n_heads = q.shape[2]
+    scale = hd ** -0.5
+    kr = _repeat_kv(ck, n_heads // n_kv)
+    vr = _repeat_kv(cv, n_heads // n_kv)
+    # contract against the cache in its storage dtype (a f32 .astype would
+    # materialize an f32 copy of the whole 32k–512k cache); accumulate f32.
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", (q * jnp.asarray(scale, q.dtype)).astype(kr.dtype),
+        kr, preferred_element_type=jnp.float32,
+    )
+    valid = jnp.arange(cache.k.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vr.dtype), vr,
+                   preferred_element_type=jnp.float32)
+    out = cm.dense(o.reshape(B, 1, -1).astype(x.dtype), p.wo)
+    return out, KVCache(k=ck, v=cv, length=pos + 1)
+
+
+def cross_attention(
+    p: AttnParams, x: jax.Array, kv_src: jax.Array, *,
+    n_heads: int, n_kv_heads: int, head_dim: int, chunk: int | None = None,
+) -> jax.Array:
+    """Cross-attention: queries from x, keys/values from kv_src (no rope)."""
+    B, S, _ = x.shape
+    Sk = kv_src.shape[1]
+    q = cm.dense(x, p.wq, p.bq).reshape(B, S, n_heads, head_dim)
+    k = cm.dense(kv_src, p.wk, p.bk).reshape(B, Sk, n_kv_heads, head_dim)
+    v = cm.dense(kv_src, p.wv, p.bv).reshape(B, Sk, n_kv_heads, head_dim)
+    k = _repeat_kv(k, n_heads // n_kv_heads)
+    v = _repeat_kv(v, n_heads // n_kv_heads)
+    q, k, v = _hint_qkv(q, k, v)
+    o = attention_core(q, k, v, causal=False, chunk=chunk)
+    return cm.dense(o.reshape(B, S, n_heads * head_dim), p.wo)

@@ -1,0 +1,152 @@
+"""Mamba-2 (SSD) block for the zamba2 hybrid architecture.
+
+The SSM state update is a per-head outer-product recurrence (state
+``headdim × d_state``) — elementwise/small-batched math the paper's GEMM
+tile-balance does not apply to (DESIGN.md §Arch-applicability). It runs as a
+``lax.scan``. The in/out projections and the gated output path are GEMMs and
+route through the balanced substrate.
+
+State is O(1) in sequence length — zamba2 runs the long_500k decode cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as cm
+
+CONV_K = 4  # depthwise causal conv width
+
+
+class MambaParams(NamedTuple):
+    w_in: jax.Array       # (d, 2*d_inner + 2*d_state + n_heads)
+    conv_w: jax.Array     # (CONV_K, d_inner + 2*d_state)
+    conv_b: jax.Array     # (d_inner + 2*d_state,)
+    a_log: jax.Array      # (n_heads,)
+    d_skip: jax.Array     # (n_heads,)
+    dt_bias: jax.Array    # (n_heads,)
+    norm_g: jax.Array     # (d_inner,) gated RMSNorm
+    w_out: jax.Array      # (d_inner, d)
+
+
+def dims(d_model: int, d_state: int, *, expand: int = 2, head_dim: int = 64):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    return d_inner, n_heads
+
+
+def init_mamba(key, d_model, d_state, *, expand=2, head_dim=64,
+               dtype=jnp.float32):
+    d_inner, n_heads = dims(d_model, d_state, expand=expand, head_dim=head_dim)
+    ks = cm.split_keys(key, 3)
+    d_proj = 2 * d_inner + 2 * d_state + n_heads
+    d_conv = d_inner + 2 * d_state
+    return MambaParams(
+        w_in=cm.normal_init(ks[0], (d_model, d_proj), dtype),
+        conv_w=cm.normal_init(ks[1], (CONV_K, d_conv), dtype, scale=0.5),
+        conv_b=jnp.zeros((d_conv,), dtype),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        d_skip=jnp.ones((n_heads,), dtype),
+        dt_bias=jnp.full((n_heads,), -4.0, dtype),
+        norm_g=jnp.ones((d_inner,), dtype),
+        w_out=cm.normal_init(ks[2], (d_inner, d_model), dtype),
+    )
+
+
+def mamba_axes():
+    return MambaParams(
+        w_in=("embed", "ffn"), conv_w=(None, "conv"), conv_b=("conv",),
+        a_log=(None,), d_skip=(None,), dt_bias=(None,),
+        norm_g=("ffn",), w_out=("ffn", "embed"),
+    )
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array    # (B, n_heads, head_dim, d_state) f32
+    conv: jax.Array   # (B, CONV_K-1, d_conv) rolling conv inputs
+
+
+def init_state(batch, d_model, d_state, *, expand=2, head_dim=64,
+               dtype=jnp.float32):
+    d_inner, n_heads = dims(d_model, d_state, expand=expand, head_dim=head_dim)
+    return MambaState(
+        ssm=jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+        conv=jnp.zeros((batch, CONV_K - 1, d_inner + 2 * d_state), dtype),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prefix: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along time. x: (B,T,C); prefix: (B,K-1,C)."""
+    xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+        for i in range(CONV_K)
+    )
+    out = jax.nn.silu(out + b.astype(x.dtype))
+    return out, xp[:, -(CONV_K - 1):]
+
+
+def _ssd_step(state, inputs):
+    """h' = exp(-a*dt) h + dt * x ⊗ B ;  y = h·C + D*x  (per head)."""
+    xh, Bt, Ct, dt, a, d_skip = inputs
+    # xh: (B,H,P); Bt/Ct: (B,N); dt: (B,H)
+    decay = jnp.exp(-a[None, :] * dt)                      # (B,H)
+    dBx = (dt[..., None] * xh)[..., None] * Bt[:, None, None, :]
+    new = decay[..., None, None] * state + dBx             # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", new, Ct) + d_skip[None, :, None] * xh
+    return new, y
+
+
+def mamba_block(
+    p: MambaParams, x: jax.Array, *, d_state: int, expand: int = 2,
+    head_dim: int = 64, state: MambaState | None = None,
+):
+    """x: (B,T,d) -> (out, new_state)."""
+    B, T, d = x.shape
+    d_inner, n_heads = dims(d, d_state, expand=expand, head_dim=head_dim)
+    proj = cm.dense(x, p.w_in)
+    z, xbc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * d_state], axis=-1
+    )
+    if state is None:
+        state = init_state(B, d, d_state, expand=expand, head_dim=head_dim,
+                           dtype=x.dtype)
+    xbc, conv_state = _causal_conv(xbc, p.conv_w, p.conv_b, state.conv)
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p.dt_bias.astype(jnp.float32)
+    )                                                       # (B,T,H)
+    a = jnp.exp(p.a_log.astype(jnp.float32))                # (H,)
+    xh = xs.astype(jnp.float32).reshape(B, T, n_heads, head_dim)
+
+    seq = (
+        xh.transpose(1, 0, 2, 3),
+        Bmat.astype(jnp.float32).transpose(1, 0, 2),
+        Cmat.astype(jnp.float32).transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+        jnp.broadcast_to(a, (T, n_heads)),
+        jnp.broadcast_to(p.d_skip.astype(jnp.float32), (T, n_heads)),
+    )
+    # chunked-BPTT (see rwkv.py): bound backward carry storage per chunk
+    chunk = 64
+    if T % chunk == 0 and T > chunk:
+        seq_c = jax.tree.map(
+            lambda x: x.reshape(T // chunk, chunk, *x.shape[1:]), seq)
+
+        @jax.checkpoint
+        def chunk_body(s, t_in):
+            return jax.lax.scan(_ssd_step, s, t_in)
+
+        new_ssm, ys = jax.lax.scan(chunk_body, state.ssm, seq_c)
+        ys = ys.reshape(T, B, n_heads, head_dim)
+    else:
+        new_ssm, ys = jax.lax.scan(_ssd_step, state.ssm, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, d_inner)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = cm.rms_norm(y.astype(x.dtype), p.norm_g)
+    out = cm.dense(y, p.w_out)
+    return out, MambaState(ssm=new_ssm, conv=conv_state)

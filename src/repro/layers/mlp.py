@@ -1,0 +1,52 @@
+"""MLP variants: SwiGLU (llama-family), GELU (whisper), squared-ReLU
+(nemotron-4), with optional biases. All GEMMs go through the balanced
+substrate; the activation is fused into the GEMM epilogue when the Pallas
+backend is active (it is part of the kernel's emit phase)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as cm
+
+
+class MlpParams(NamedTuple):
+    w_in: jax.Array            # (d, f)
+    w_gate: jax.Array | None   # (d, f) for gated (SwiGLU) variants
+    w_out: jax.Array           # (f, d)
+    b_in: jax.Array | None
+    b_out: jax.Array | None
+
+
+def init_mlp(key, d_model, d_ff, *, gated=True, bias=False, dtype=jnp.float32):
+    ks = cm.split_keys(key, 3)
+    return MlpParams(
+        w_in=cm.normal_init(ks[0], (d_model, d_ff), dtype),
+        w_gate=cm.normal_init(ks[1], (d_model, d_ff), dtype) if gated else None,
+        w_out=cm.normal_init(ks[2], (d_ff, d_model), dtype),
+        b_in=jnp.zeros((d_ff,), dtype) if bias else None,
+        b_out=jnp.zeros((d_model,), dtype) if bias else None,
+    )
+
+
+def mlp_axes(gated=True, bias=False):
+    return MlpParams(
+        w_in=("embed", "ffn"),
+        w_gate=("embed", "ffn") if gated else None,
+        w_out=("ffn", "embed"),
+        b_in=("ffn",) if bias else None,
+        b_out=("embed",) if bias else None,
+    )
+
+
+def mlp(p: MlpParams, x: jax.Array, *, activation: str = "silu") -> jax.Array:
+    """activation: 'silu' (gated => SwiGLU), 'gelu', 'relu2', 'relu'."""
+    if p.w_gate is not None:
+        g = cm.dense(x, p.w_gate, activation=activation)
+        h = cm.dense(x, p.w_in, p.b_in)
+        h = g * h
+    else:
+        h = cm.dense(x, p.w_in, p.b_in, activation=activation)
+    return cm.dense(h, p.w_out, p.b_out)

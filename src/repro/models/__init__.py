@@ -1,0 +1,92 @@
+"""Model zoo: family dispatch for init / axes / forward / serve paths.
+
+Families:
+  dense, moe, rwkv, hybrid   -> models.lm        (decoder-only)
+  encdec                     -> models.encdec    (whisper backbone)
+  vlm                        -> models.vision_lm (cross-attn image layers)
+
+Batch convention: a dict with 'tokens' (B, S) plus family extras
+('frames' for encdec, 'image_embeds' for vlm). ``forward`` returns
+(hidden, aux_loss); ``lm_loss`` consumes hidden.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm, vision_lm
+from repro.models.lm import lm_loss
+
+_LM_FAMILIES = ("dense", "moe", "rwkv", "hybrid")
+
+
+def init(key, cfg: ModelConfig):
+    if cfg.family in _LM_FAMILIES:
+        return lm.init_lm(key, cfg)
+    if cfg.family == "encdec":
+        return encdec.init_encdec(key, cfg)
+    if cfg.family == "vlm":
+        return vision_lm.init_vlm(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def axes(cfg: ModelConfig):
+    if cfg.family in _LM_FAMILIES:
+        return lm.lm_axes(cfg)
+    if cfg.family == "encdec":
+        return encdec.encdec_axes(cfg)
+    if cfg.family == "vlm":
+        return vision_lm.vlm_axes(cfg)
+    raise ValueError(cfg.family)
+
+
+def forward(params, batch: dict[str, Any], cfg: ModelConfig, mesh=None):
+    if cfg.family in _LM_FAMILIES:
+        return lm.forward(params, batch["tokens"], cfg, mesh=mesh)
+    if cfg.family == "encdec":
+        return encdec.forward(params, batch, cfg, mesh=mesh)
+    if cfg.family == "vlm":
+        return vision_lm.forward(params, batch, cfg, mesh=mesh)
+    raise ValueError(cfg.family)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in _LM_FAMILIES:
+        return lm.init_decode_state(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return encdec.init_decode_state(cfg, batch, max_len)
+    if cfg.family == "vlm":
+        return vision_lm.init_decode_state(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def prefill(params, batch, cfg: ModelConfig, state, mesh=None):
+    if cfg.family in _LM_FAMILIES:
+        return lm.prefill(params, batch["tokens"], cfg, state, mesh=mesh)
+    if cfg.family == "encdec":
+        return encdec.prefill(params, batch, cfg, state, mesh=mesh)
+    if cfg.family == "vlm":
+        return vision_lm.prefill(params, batch, cfg, state, mesh=mesh)
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None):
+    if cfg.family in _LM_FAMILIES:
+        return lm.decode_step(params, tokens, cfg, state, mesh=mesh)
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, tokens, cfg, state, mesh=mesh)
+    if cfg.family == "vlm":
+        return vision_lm.decode_step(params, tokens, cfg, state, mesh=mesh)
+    raise ValueError(cfg.family)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+__all__ = [
+    "init", "axes", "forward", "lm_loss", "init_decode_state", "prefill",
+    "decode_step", "param_count",
+]

@@ -1,0 +1,164 @@
+"""Logical-axis partitioning: axes trees -> PartitionSpecs/NamedShardings.
+
+Rules (the mesh rendition of the paper's array mapping, DESIGN.md §5):
+
+  embed  -> data    FSDP: weights gathered over 'data' per layer
+  ffn/heads/kv/vocab -> model    Megatron TP (column/row parallel pairs)
+  expert -> data    EP: experts live where the tokens' DP shard is
+  layers/lora/conv/state -> None (stacked scan dim is never sharded)
+
+Conflict resolution: a mesh axis may appear once per spec — first (leftmost)
+logical axis wins, later claims degrade to None. Divisibility: a dim that the
+mesh axis extent does not divide degrades to None (e.g. tiny smoke configs).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.lm import is_axes_leaf
+
+DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    "embed": "data",
+    "ffn": "model",
+    "heads": "model",
+    "kv": "model",
+    "vocab": "model",
+    "expert": "data",
+    "layers": None,
+    "lora": None,
+    "conv": None,
+    "state": None,
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The DP axes: ('pod', 'data') on multi-pod meshes, ('data',) otherwise."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def spec_for(
+    axes: tuple | None,
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> P:
+    """One param leaf: logical axes tuple + concrete shape -> PartitionSpec."""
+    if axes is None:
+        return P()
+    rules = rules or DEFAULT_RULES
+    sizes = mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    entries: list = []
+    for dim, logical in zip(shape, axes):
+        mesh_axis = rules.get(logical) if logical is not None else None
+        if mesh_axis is None or mesh_axis not in sizes:
+            entries.append(None)
+            continue
+        if mesh_axis in used or dim % sizes[mesh_axis] != 0:
+            entries.append(None)
+            continue
+        used.add(mesh_axis)
+        entries.append(mesh_axis)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_specs(axes_tree, shape_tree, mesh: Mesh, rules=None):
+    """Full trees: axes tree (logical) + abstract shapes -> PartitionSpecs."""
+    ax_leaves = jax.tree.leaves(axes_tree, is_leaf=is_axes_leaf)
+    sh_leaves, treedef = jax.tree.flatten(shape_tree)
+    if len(ax_leaves) != len(sh_leaves):
+        raise ValueError(
+            f"axes tree ({len(ax_leaves)} leaves) does not match param tree "
+            f"({len(sh_leaves)} leaves)")
+    specs = [
+        spec_for(a, s.shape, mesh, rules) for a, s in zip(ax_leaves, sh_leaves)
+    ]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def param_shardings(axes_tree, shape_tree, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(axes_tree, shape_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_specs(batch_shapes: dict, mesh: Mesh) -> dict:
+    """Input batch: leading (batch) dim over the DP axes when divisible."""
+    dp = data_axes(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    dp_total = int(np.prod([sizes[a] for a in dp])) if dp else 1
+
+    def spec(x):
+        if x.ndim == 0:
+            return P()
+        if dp and x.shape[0] % dp_total == 0 and x.shape[0] > 0:
+            return P(dp if len(dp) > 1 else dp[0], *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def decode_state_specs(state_shapes, cfg, mesh: Mesh):
+    """Decode-state sharding. KV caches: batch over DP when divisible, else
+    the *sequence* dim over 'data' (long_500k: batch=1, 512k cache) — the
+    sequence-parallel cache layout; GSPMD then lowers decode attention to the
+    flash-decode partial-softmax + combine pattern. SSM/WKV states: heads
+    over 'model'."""
+    dp = data_axes(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    dp_total = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    model = sizes.get("model", 1)
+    dp_entry = (dp if len(dp) > 1 else dp[0]) if dp else None
+
+    def spec(path, x):
+        keyname = "/".join(str(getattr(p, "key", getattr(p, "name", "")))
+                           for p in path)
+        if x.ndim == 0:
+            return P()
+        entries = [None] * x.ndim
+        if keyname.split("/")[0] in ("enc", "img"):
+            # (B, S, d) context tensors: batch-sharded when divisible
+            if x.shape[0] % dp_total == 0 and dp_entry is not None:
+                entries[0] = dp_entry
+        elif "kv" in keyname and x.ndim >= 4:
+            # (L, B, S, H, D) or (G, n, B, S, H, D)
+            b_dim, s_dim, h_dim = x.ndim - 4, x.ndim - 3, x.ndim - 2
+            d_dim = x.ndim - 1
+            if x.shape[b_dim] % dp_total == 0 and dp_entry is not None:
+                entries[b_dim] = dp_entry
+            elif "data" in sizes and x.shape[s_dim] % sizes["data"] == 0:
+                entries[s_dim] = "data"  # sequence-sharded cache (long_500k)
+            if model > 1:
+                # GQA: few KV heads may not divide the model axis — fall back
+                # to head_dim (local cache update, psum'd scores), then
+                # sequence (flash-decode partials).
+                if x.shape[h_dim] % model == 0:
+                    entries[h_dim] = "model"
+                elif x.shape[d_dim] % model == 0:
+                    entries[d_dim] = "model"
+                elif entries[s_dim] is None and x.shape[s_dim] % model == 0:
+                    entries[s_dim] = "model"
+        elif x.ndim >= 2:
+            # states: (L, B, ...) — batch over DP if divisible; else try
+            # sharding the widest trailing dim over model.
+            if x.shape[1] % dp_total == 0 and dp_entry is not None:
+                entries[1] = dp_entry
+            if x.ndim >= 3 and x.shape[2] % model == 0 and model > 1:
+                entries[2] = "model"
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, state_shapes)

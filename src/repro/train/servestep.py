@@ -1,0 +1,89 @@
+"""Serving step factories: prefill and decode, sharded + donated.
+
+``decode_*`` shapes lower ``serve_step`` (one new token against a seq_len KV
+cache), NOT ``train_step``, per the assignment. Cache shardings come from
+``sharding.decode_state_specs`` — batch-sharded when the batch divides the DP
+extent, sequence-sharded over 'data' for long_500k (batch=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass
+class ServeArtifacts:
+    prefill_fn: Callable | None
+    decode_fn: Callable
+    param_shardings: Any
+    state_shardings: Any
+    state_shapes: Any
+
+
+def make_serve_step(
+    cfg: ModelConfig, mesh: Mesh, *, batch: int, max_len: int,
+    with_prefill: bool = True,
+) -> ServeArtifacts:
+    axes = models.axes(cfg)
+    param_shapes = jax.eval_shape(
+        lambda: models.init(jax.random.PRNGKey(0), cfg))
+    pshard = shd.param_shardings(axes, param_shapes, mesh)
+    state_shapes = jax.eval_shape(
+        lambda: models.init_decode_state(cfg, batch, max_len))
+    sspecs = shd.decode_state_specs(state_shapes, cfg, mesh)
+    sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    tok_shard = NamedSharding(mesh, shd.batch_specs(
+        {"t": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}, mesh)["t"])
+
+    def decode(params, state, tokens):
+        logits, new_state = models.decode_step(
+            params, tokens, cfg, state, mesh=mesh)
+        return logits, new_state
+
+    decode_fn = jax.jit(
+        decode,
+        in_shardings=(pshard, sshard, tok_shard),
+        out_shardings=(NamedSharding(mesh, P()), sshard),
+        donate_argnums=(1,),
+    )
+
+    prefill_fn = None
+    if with_prefill:
+        def prefill(params, state, batch_in):
+            logits, new_state = models.prefill(
+                params, batch_in, cfg, state, mesh=mesh)
+            return logits, new_state
+
+        prefill_fn = jax.jit(
+            prefill,
+            in_shardings=(pshard, sshard, None),
+            out_shardings=(NamedSharding(mesh, P()), sshard),
+            donate_argnums=(1,),
+        )
+
+    return ServeArtifacts(
+        prefill_fn=prefill_fn, decode_fn=decode_fn, param_shardings=pshard,
+        state_shardings=sshard, state_shapes=state_shapes,
+    )
+
+
+def prefill_input_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_len, cfg.d_model),
+            jnp.dtype(cfg.activation_dtype))
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model),
+            jnp.dtype(cfg.activation_dtype))
+    return out

@@ -1,0 +1,88 @@
+"""HLO static analyzer: loop-aware FLOP/byte/collective accounting."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.roofline import hlo as H
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_single_dot_flops():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    c = _compile(lambda a, b: a @ b, a, b)
+    res = H.analyze(c.as_text())
+    assert res.flops == 2 * 128 * 256 * 64
+    # bytes: at least read A + B + write C
+    assert res.bytes >= (128 * 256 + 256 * 64 + 128 * 64) * 4
+
+
+def test_scan_multiplies_body_cost():
+    """The reason this analyzer exists: XLA cost_analysis counts a while
+    body once; layer-scanned models need trip-count multiplication."""
+    L, B, D = 6, 32, 64
+
+    def f(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    c = _compile(f, jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+                 jax.ShapeDtypeStruct((B, D), jnp.float32))
+    res = H.analyze(c.as_text())
+    assert res.flops == L * 2 * B * D * D
+    assert res.unknown_trip_loops == 0
+    xla_flops = c.cost_analysis().get("flops", 0)
+    assert res.flops > xla_flops  # XLA undercounts
+
+
+def test_nested_scan():
+    Lo, Li, B, D = 3, 4, 8, 32
+
+    def f(w, x):
+        def outer(h, wo):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ wo), None
+            h2, _ = jax.lax.scan(inner, h, jnp.arange(Li))
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, w)
+        return h
+
+    c = _compile(f, jax.ShapeDtypeStruct((Lo, D, D), jnp.float32),
+                 jax.ShapeDtypeStruct((B, D), jnp.float32))
+    res = H.analyze(c.as_text())
+    assert res.flops == Lo * Li * 2 * B * D * D
+
+
+def test_tuple_type_ops_parse():
+    """Long tuple types contain `/*index=N*/` comments (with '=') — the
+    parser must not choke (this bug hid every while body's FLOPs)."""
+    line = ("  %w = (s32[], f32[2,3]{1,0}, f32[4]{0}, s8[1]{0}, pred[], "
+            "/*index=5*/f32[6]{0}) while(%t), condition=%c, body=%b")
+    parsed = H._parse_op_line(line)
+    assert parsed is not None
+    name, type_str, opcode, rest = parsed
+    assert opcode == "while" and "index=5" in type_str
+
+
+def test_dot_general_contracting_dims():
+    # batched dot with nonstandard contraction
+    def f(a, b):
+        return jax.lax.dot_general(a, b, (((2,), (1,)), (((0,), (0,)))))
+
+    c = _compile(f, jax.ShapeDtypeStruct((4, 8, 16), jnp.float32),
+                 jax.ShapeDtypeStruct((4, 16, 32), jnp.float32))
+    res = H.analyze(c.as_text())
+    assert res.flops == 2 * 4 * 8 * 32 * 16
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[2,3]{1,0}") == 24
+    assert H._shape_bytes("bf16[10]{0}") == 20
+    assert H._shape_bytes("(f32[2]{0}, s8[4]{0})") == 12
+    assert H._shape_bytes("pred[]") == 1

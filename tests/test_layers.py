@@ -1,0 +1,148 @@
+"""Layer-level unit tests: attention equivalences, RWKV/Mamba recurrences."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn
+from repro.layers import common as cm
+from repro.layers import mamba as mb
+from repro.layers import rwkv
+
+
+RNG = np.random.default_rng(7)
+
+
+def _r(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# -------------------------------------------------------------- attention
+def test_chunked_equals_plain_causal():
+    q, k, v = _r(2, 96, 4, 16), _r(2, 96, 4, 16), _r(2, 96, 4, 16)
+    a = attn.plain_attention(q, k, v, causal=True)
+    b = attn.chunked_attention(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_equals_plain_noncausal_ragged():
+    q, k, v = _r(1, 40, 2, 8), _r(1, 50, 2, 8), _r(1, 50, 2, 8)
+    a = attn.plain_attention(q, k, v, causal=False)
+    b = attn.chunked_attention(q, k, v, causal=False, chunk=16)  # pads 50->64
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_full_attention():
+    """Incremental decode at position t == row t of full causal attention."""
+    d, H, Dh, S = 32, 4, 8, 10
+    p = attn.init_attn(jax.random.PRNGKey(0), d, H, H, Dh)
+    x = _r(1, S, d)
+    full = attn.self_attention(p, x, n_heads=H, n_kv_heads=H, head_dim=Dh,
+                               chunk=None)
+    cache = attn.init_kv_cache(1, S + 2, H, Dh, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = attn.decode_attention(p, x[:, t:t + 1], cache)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_repeat_kv():
+    x = _r(2, 3, 2, 4)
+    y = attn._repeat_kv(x, 3)
+    assert y.shape == (2, 3, 6, 4)
+    np.testing.assert_array_equal(np.asarray(y[:, :, 0]),
+                                  np.asarray(y[:, :, 2]))
+
+
+# ------------------------------------------------------------------ rwkv
+def test_rwkv_incremental_equals_full():
+    """Running time_mix over T steps one-at-a-time with carried state must
+    equal the full-sequence scan."""
+    d, H, T = 32, 2, 6
+    p = rwkv.init_time_mix(jax.random.PRNGKey(1), d)
+    x = _r(1, T, d)
+    full, (state_f, _) = rwkv.time_mix(p, x, n_heads=H)
+    state = None
+    prev = None
+    outs = []
+    for t in range(T):
+        y, (state, prev) = rwkv.time_mix(
+            p, x[:, t:t + 1], n_heads=H, state=state, x_prev=prev)
+        outs.append(y)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_f),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_decay_in_unit_interval():
+    d = 16
+    p = rwkv.init_time_mix(jax.random.PRNGKey(2), d)
+    x = _r(1, 4, d)
+    _, _ = rwkv.time_mix(p, x, n_heads=2)  # runs without nan
+    wlog = p.w0.astype(jnp.float32) + cm.dense(
+        jnp.tanh(cm.dense(x, p.w_lora_a)), p.w_lora_b).astype(jnp.float32)
+    w = np.asarray(jnp.exp(-jnp.exp(wlog)))
+    assert np.all((w > 0) & (w < 1))
+
+
+# ----------------------------------------------------------------- mamba
+def test_mamba_incremental_equals_full():
+    d, N, T = 32, 8, 5
+    p = mb.init_mamba(jax.random.PRNGKey(3), d, N, head_dim=16)
+    x = _r(1, T, d)
+    full, state_f = mb.mamba_block(p, x, d_state=N, head_dim=16)
+    state = mb.init_state(1, d, N, head_dim=16)
+    outs = []
+    for t in range(T):
+        y, state = mb.mamba_block(p, x[:, t:t + 1], d_state=N, head_dim=16,
+                                  state=state)
+        outs.append(y)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state.ssm), np.asarray(state_f.ssm),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_state_is_constant_size():
+    """The sub-quadratic property behind long_500k: state size independent
+    of sequence length."""
+    d, N = 32, 8
+    s1 = mb.init_state(1, d, N)
+    s2 = mb.init_state(1, d, N)
+    assert s1.ssm.shape == s2.ssm.shape
+    n_state = s1.ssm.size + s1.conv.size
+    assert n_state < 64 * d * d  # O(1) in T
+
+
+# ------------------------------------------------------------ norms/rope
+def test_rmsnorm_unit_scale():
+    x = _r(4, 32) * 100
+    y = cm.rms_norm(x, jnp.ones((32,)))
+    rms = np.asarray(jnp.sqrt(jnp.mean(y * y, -1)))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rotary_preserves_norm_and_relativity():
+    x = _r(1, 8, 2, 16)
+    sin, cos = cm.rotary_embedding(jnp.arange(8)[None], 16)
+    y = cm.apply_rotary(x, sin, cos)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    # relative property: <R_m q, R_n k> depends only on m - n
+    q, k = _r(1, 1, 1, 16), _r(1, 1, 1, 16)
+    def dot_at(m, n):
+        sm, cm_ = cm.rotary_embedding(jnp.asarray([[m]], jnp.float32), 16)
+        sn, cn = cm.rotary_embedding(jnp.asarray([[n]], jnp.float32), 16)
+        qm = cm.apply_rotary(q, sm, cm_)
+        kn = cm.apply_rotary(k, sn, cn)
+        return float(jnp.sum(qm * kn))
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
