@@ -25,7 +25,7 @@ def main() -> None:
                     help="comma-separated module keys to run")
     args = ap.parse_args()
 
-    from benchmarks import (fig6_kmt, fig78_sweep, roofline_cells,
+    from benchmarks import (fig6_kmt, fig78_sweep, int8_sweep, roofline_cells,
                             sec532_buffering, sec533_overlap, table1_kernel,
                             table23_balanced, wallclock)
     modules = {
@@ -33,6 +33,7 @@ def main() -> None:
         "table23": [table23_balanced.run, table23_balanced.run_skinny],
         "fig6": [fig6_kmt.run],
         "fig78": [fig78_sweep.run],
+        "int8": [int8_sweep.run],
         "sec532": [sec532_buffering.run],
         "sec533": [sec533_overlap.run],
         "wallclock": [wallclock.run],

@@ -1,0 +1,105 @@
+"""Quantized serving: the int8 path end to end, from calibration to tokens.
+
+Walks the full post-training-quantization story (docs/quantization.md):
+
+1. calibrate + quantize a linear layer, verify the fused-epilogue GEMM
+   against the f32 reference;
+2. quantize whole MLP / attention blocks (`QuantizedLinear` path);
+3. serve a smoke-size LM with every projection routed through the W8A8
+   balanced-GEMM substrate (`--quantize int8` in repro.launch.serve).
+
+Run:  PYTHONPATH=src python examples/quantized_serve.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as C
+from repro import models
+from repro.core import balance
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import serve_batch
+from repro.layers import attention as A
+from repro.layers import common as cm
+from repro.layers import mlp as M
+from repro.layers import quantized as Q
+from repro.quant import Calibrator, dequantize, quantize_per_tensor
+
+# ------------------------------------------------- 1) calibrate + quantize
+rng = np.random.default_rng(0)
+w = jnp.asarray(rng.normal(size=(256, 512)) * 0.05, jnp.float32)
+x = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+
+cal = Calibrator()                      # per-tensor activation observer
+for i in range(4):                      # "representative batches"
+    cal.observe(jnp.asarray(rng.normal(size=(64, 256)), jnp.float32))
+print(f"calibrated activation scale:    {float(cal.scale()):.5f}")
+
+ql = Q.quantize_linear(w)               # per-channel weights, (N, K) layout
+want = x @ w
+got = Q.qdense(x, ql)                   # per-tensor dynamic activation quant
+rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+print(f"qdense vs f32 reference:        rel err = {rel:.4f}")
+assert rel < 0.02, rel
+
+# the same GEMM through the actual Pallas kernel body (interpret mode):
+got_k = Q.qdense(x, ql, backend="interpret")
+print(f"pallas epilogue vs xla path:    max |diff| = "
+      f"{float(jnp.max(jnp.abs(got_k - got))):.2e}")
+np.testing.assert_allclose(np.asarray(got_k), np.asarray(got), atol=1e-5)
+
+# requantize chain: int8 output at a downstream scale, still one kernel
+s_out = quantize_per_tensor(want).scale
+q_out = Q.qdense(x, ql, out_qscale=s_out)
+rel = float(jnp.linalg.norm(dequantize(q_out, s_out) - want)
+            / jnp.linalg.norm(want))
+print(f"int8-out requantize chain:      rel err = {rel:.4f}  "
+      f"(dtype={q_out.dtype})")
+assert rel < 0.03, rel
+
+# ------------------------------------------------- 2) quantized blocks
+key = jax.random.PRNGKey(0)
+xb = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 128), jnp.float32)
+
+p_mlp = M.init_mlp(key, 128, 512, gated=True)
+q_mlp = Q.quantize_mlp(p_mlp)
+rel = float(jnp.linalg.norm(Q.qmlp(q_mlp, xb) - M.mlp(p_mlp, xb))
+            / jnp.linalg.norm(M.mlp(p_mlp, xb)))
+print(f"quantized SwiGLU MLP:           rel err = {rel:.4f}")
+assert rel < 0.08, rel
+
+p_att = A.init_attn(key, 128, 8, 4, 16)
+want_att = A.self_attention(p_att, xb, n_heads=8, n_kv_heads=4, head_dim=16)
+q_att = Q.quantize_attn(p_att)
+got_att = Q.q_self_attention(q_att, xb, n_heads=8, n_kv_heads=4, head_dim=16)
+rel = float(jnp.linalg.norm(got_att - want_att) / jnp.linalg.norm(want_att))
+print(f"quantized GQA attention:        rel err = {rel:.4f}")
+assert rel < 0.08, rel
+
+# ------------------------------------------------- 3) the balanced point
+res8 = balance.solve_exhaustive(4096, 4096, 4096, in_dtype=jnp.int8,
+                                out_dtype=jnp.int8)
+res16 = balance.solve_exhaustive(4096, 4096, 4096, in_dtype=jnp.bfloat16,
+                                 out_dtype=jnp.bfloat16)
+print(f"balanced point int8 vs bf16:    "
+      f"{res8.plan.bm}x{res8.plan.bk}x{res8.plan.bn} ({res8.tops:.0f} TOPS) "
+      f"vs {res16.plan.bm}x{res16.plan.bk}x{res16.plan.bn} "
+      f"({res16.tops:.0f} TOPS)")
+assert res8.tops >= res16.tops
+
+# ------------------------------------------------- 4) serve a quantized LM
+cfg = C.smoke(C.get_config("qwen1.5-4b"))
+mesh = make_local_mesh()
+params = models.init(jax.random.PRNGKey(0), cfg)
+prompts = jnp.asarray(
+    rng.integers(0, cfg.vocab_size, size=(2, 8)), jnp.int32)
+
+cm.set_quant_mode(None)
+out_f = serve_batch(cfg, mesh, params, prompts, gen_len=8, max_len=17)
+cm.set_quant_mode("int8")
+out_q = serve_batch(cfg, mesh, params, prompts, gen_len=8, max_len=17)
+cm.set_quant_mode(None)
+agree = float(np.mean(np.asarray(out_f) == np.asarray(out_q)))
+print(f"served 16 tokens under W8A8:    greedy agreement vs f32 = "
+      f"{agree:.0%} (random-init smoke model)")
+print("quantized serve: OK")

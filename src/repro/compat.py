@@ -1,0 +1,82 @@
+"""Version-tolerant wrappers over jax APIs that moved between releases.
+
+The framework targets the current jax API surface but must also run on the
+0.4.x series (this container ships 0.4.37). Two surfaces moved:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+  ``jax`` namespace, and its replication-check kwarg was renamed
+  ``check_rep`` -> ``check_vma``;
+* the Pallas TPU compiler-params dataclass was renamed
+  ``TPUCompilerParams`` -> ``CompilerParams``.
+
+Everything else in the codebase imports these through here so call sites stay
+written against the modern spelling.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+
+def ensure_partitionable_rng() -> None:
+    """Pin ``jax_threefry_partitionable`` to True (the modern default).
+
+    The framework relies on sharding-invariant RNG: ``init_fn`` must produce
+    bit-identical parameters on a 1-device and an N-device mesh (the
+    multi-device parity tests assert this). jax < 0.5 defaulted the flag to
+    False, where random bits depend on the sharding layout.
+    """
+    import jax
+
+    try:
+        jax.config.update("jax_threefry_partitionable", True)
+    except AttributeError:
+        pass  # flag removed once the behavior became unconditional
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on any supported jax."""
+    try:
+        from jax import shard_map as _sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm
+
+        return _sm(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=check_vma,
+    )
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the concept exists."""
+    import jax
+
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_from_devices(devices, axes):
+    """``jax.sharding.Mesh`` with Auto axis types where the concept exists."""
+    from jax.sharding import Mesh
+
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return Mesh(devices, axes)
+    return Mesh(devices, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """Instantiate the Pallas TPU compiler params under either name."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

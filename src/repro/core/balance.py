@@ -38,14 +38,21 @@ def _candidates(dim_aligned: Sequence[int]) -> list[int]:
     return sorted(set(dim_aligned))
 
 
-def candidate_blocks(itemsize: int, *, max_bm=1024, max_bk=8192, max_bn=2048):
+def candidate_blocks(itemsize: int, *, max_bm=1024, max_bk=None, max_bn=2048):
     """Enumerate hardware-aligned candidate block dims.
 
     bm may drop to the sublane granularity (skinny-M GEMMs); bk/bn stay
     multiples of the 128-lane so HBM runs and MXU passes stay aligned —
     the "multiples of r, s, t" constraint of §4.5.1.
+
+    The bk ceiling is *byte*-budget derived: Eq. 5's bk terms scale with
+    itemsize, so the same VMEM budget admits proportionally longer K blocks
+    for narrower dtypes (int8 explores up to 2x the bf16 bk range — the
+    itemsize-1 working set the paper's Table 2 kernels exploit).
     """
     sub = SUBLANE[itemsize]
+    if max_bk is None:
+        max_bk = 16384 // itemsize
     bms = _candidates(
         [sub, 2 * sub, 4 * sub, 64]
         + list(range(128, max_bm + 1, 128))

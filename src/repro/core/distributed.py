@@ -23,7 +23,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.gemm import balanced_gemm

@@ -59,11 +59,16 @@ def balanced_gemm(
     out_dtype=None,
     b_layout: str = "row",
     activation: str | None = None,
+    out_scale: jax.Array | None = None,
     backend: str = "auto",
     plan: GemmPlan | None = None,
     hw: pm.HardwareSpec = pm.TPU_V5E,
 ) -> jax.Array:
-    """Balanced tiled GEMM. Leading dims of ``a`` are flattened (batch)."""
+    """Balanced tiled GEMM. Leading dims of ``a`` are flattened (batch).
+
+    ``out_scale`` (N,) fuses per-output-channel requantization into the
+    kernel epilogue — the quantized-inference path (docs/quantization.md).
+    """
     *lead, K = a.shape
     M = 1
     for d in lead:
@@ -77,6 +82,6 @@ def balanced_gemm(
         )
     out = ops.balanced_matmul(
         a2, b, bias, plan=plan, out_dtype=out_dtype, b_layout=b_layout,
-        activation=activation, backend=backend,
+        activation=activation, out_scale=out_scale, backend=backend,
     )
     return out.reshape(*lead, N)

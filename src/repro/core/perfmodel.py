@@ -40,10 +40,16 @@ class HardwareSpec:
     vmem_bw: float          # B/s VMEM <-> VREG (for accumulator traffic)
     hbm_latency_bytes: float  # contiguity knee of effective_bw (paper Fig. 6)
     mxu: int = 128          # native MXU tile edge
+    peak_flops_f32: float = 0.0  # FLOP/s for f32 passes (0 -> bf16/2)
 
     def peak_flops(self, dtype) -> float:
-        if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        """Per-dtype peak table — the Table 2 vs Table 3 analog: int8 runs
+        at 2x the bf16 MAC rate, f32 at half (two bf16 passes)."""
+        dt = jnp.dtype(dtype)
+        if jnp.issubdtype(dt, jnp.integer):
             return self.peak_flops_int8
+        if dt == jnp.dtype(jnp.float32):
+            return self.peak_flops_f32 or self.peak_flops_bf16 / 2
         return self.peak_flops_bf16
 
 
@@ -56,6 +62,7 @@ TPU_V5E = HardwareSpec(
     vmem_bytes=16 * 2**20,
     vmem_bw=11e12,
     hbm_latency_bytes=512.0,
+    peak_flops_f32=98.5e12,
 )
 
 

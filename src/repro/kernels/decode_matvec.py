@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
 from repro.kernels import ref as _ref
 from repro.kernels.matmul import _acc_dtype
 
@@ -92,7 +93,7 @@ def decode_matvec(
         out_specs=pl.BlockSpec((B, bn), lambda j, k: (0, j)),
         out_shape=jax.ShapeDtypeStruct((B, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((B, bn), acc)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

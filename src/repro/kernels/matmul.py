@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
 from repro.kernels import ref as _ref
 
 # Sublane alignment per dtype (second-to-last dim); lane dim is always 128.
@@ -44,18 +45,27 @@ def _acc_dtype(dtype) -> Any:
 
 
 def _mm_kernel(
-    a_ref,
-    b_ref,
-    bias_ref,
-    o_ref,
-    acc_ref,
-    *,
+    *refs,
     k_steps: int,
     out_dtype,
     b_layout: str,
     activation: str | None,
+    has_bias: bool,
+    has_scale: bool,
 ):
-    """One (i, j, k) grid step: acc += A[i,k] @ B[k,j]; emit at last k."""
+    """One (i, j, k) grid step: acc += A[i,k] @ B[k,j]; emit at last k.
+
+    The emit phase is the paper's fused epilogue (§5.1): bias add (in the
+    accumulator domain), optional per-output-channel requantization scale,
+    activation, and the saturating precision-reduction cast — all before the
+    single HBM write of the output block (§5.3.2).
+    """
+    it = iter(refs)
+    a_ref, b_ref = next(it), next(it)
+    bias_ref = next(it) if has_bias else None
+    scale_ref = next(it) if has_scale else None
+    o_ref, acc_ref = next(it), next(it)
+
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -77,10 +87,17 @@ def _mm_kernel(
     @pl.when(k == k_steps - 1)
     def _emit():
         out = acc_ref[...]
+        if scale_ref is not None:
+            # requantize first, THEN add the (real-units, f32) bias: adding
+            # in the i32 accumulator domain would need bias/scale, which
+            # overflows i32 for small scales (tiny activations x weights)
+            out = out.astype(jnp.float32) * scale_ref[...]
         if bias_ref is not None:
             out = out + bias_ref[...].astype(out.dtype)
         if activation is not None and activation != "none":
             out = _ref.apply_activation(out, activation)
+        if scale_ref is not None and jnp.issubdtype(out_dtype, jnp.integer):
+            out = jnp.round(out)
         o_ref[...] = _ref.saturating_cast(out, out_dtype)
 
 
@@ -102,6 +119,7 @@ def matmul(
     a: jax.Array,
     b: jax.Array,
     bias: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
     *,
     bm: int = 128,
     bk: int = 512,
@@ -111,11 +129,18 @@ def matmul(
     activation: str | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """C[M,N] = act(A[M,K] @ B + bias) with B (K,N) row- or (N,K) col-major.
+    """C[M,N] = act(A[M,K] @ B * out_scale + bias), B (K,N) row or (N,K) col.
 
     Dimensions must already be multiples of the block sizes — callers go
     through ``repro.kernels.ops`` which applies the paper's zero-padding to
     the native GEMM size (§5.3.1).
+
+    ``out_scale`` is the (N,)-shaped f32 per-output-channel requantization
+    multiplier applied to the accumulator inside the epilogue (the in-kernel
+    generalization of §5.1 precision reduction); ``bias`` is added *after*
+    it, in real f32 units — never pre-scale a bias into the i32 domain.
+    Without ``out_scale``, bias is added to the raw accumulator as before.
+    Semantics match :func:`repro.kernels.ref.matmul_ref`.
     """
     if out_dtype is None:
         out_dtype = a.dtype
@@ -148,13 +173,21 @@ def matmul(
         # Keep the bias 2D for TPU layout friendliness; broadcast over bm.
         args.append(bias.reshape(1, N))
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+    if out_scale is not None:
+        if out_scale.shape != (N,):
+            raise ValueError(
+                f"out_scale must be (N,)=({N},), got {out_scale.shape}")
+        args.append(out_scale.astype(jnp.float32).reshape(1, N))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
 
     kernel = functools.partial(
-        _mm_kernel if bias is not None else _mm_kernel_nobias,
+        _mm_kernel,
         k_steps=k_steps,
         out_dtype=out_dtype,
         b_layout=b_layout,
         activation=activation,
+        has_bias=bias is not None,
+        has_scale=out_scale is not None,
     )
 
     return pl.pallas_call(
@@ -164,15 +197,11 @@ def matmul(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(*args)
-
-
-def _mm_kernel_nobias(a_ref, b_ref, o_ref, acc_ref, **kw):
-    _mm_kernel(a_ref, b_ref, None, o_ref, acc_ref, **kw)
 
 
 def vmem_bytes(

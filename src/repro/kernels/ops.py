@@ -61,24 +61,36 @@ def balanced_matmul(
     out_dtype=None,
     b_layout: str = "row",
     activation: str | None = None,
+    out_scale: jax.Array | None = None,
     backend: str = "auto",
 ) -> jax.Array:
     """General GEMM through the balanced Pallas kernel with zero-padding.
 
     backend: 'pallas' | 'interpret' | 'xla' | 'auto' (pallas on TPU else xla).
+    ``out_scale``: (N,) per-output-channel requantization multiplier, fused
+    into the kernel epilogue (see kernels/matmul.py).
     """
     if out_dtype is None:
         out_dtype = a.dtype
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    M, K = a.shape
+    N = b.shape[0] if b_layout == "col" else b.shape[1]
+    if out_scale is not None:
+        # normalize per-tensor (scalar) scales to (N,) and surface shape
+        # errors against the *unpadded* N, before zero-padding obscures it
+        if out_scale.ndim not in (0, 1) or (
+                out_scale.ndim == 1 and out_scale.shape != (N,)):
+            raise ValueError(
+                f"out_scale must be scalar or (N,)=({N},), "
+                f"got {out_scale.shape}")
+        out_scale = jnp.broadcast_to(out_scale.astype(jnp.float32), (N,))
     if backend == "xla":
         return _ref.matmul_ref(
             a, b, out_dtype=out_dtype, b_layout=b_layout, bias=bias,
-            activation=activation,
+            activation=activation, out_scale=out_scale,
         )
 
-    M, K = a.shape
-    N = b.shape[0] if b_layout == "col" else b.shape[1]
     plan = _clamp_plan(plan or GemmPlan(), M, K, N, a.dtype)
     Mp, Kp, Np = plan.native_size(M, K, N)
     ap = _pad2(a, Mp, Kp)
@@ -86,10 +98,17 @@ def balanced_matmul(
     biasp = None
     if bias is not None:
         biasp = jnp.pad(bias, (0, Np - N)) if Np != N else bias
+    scalep = None
+    if out_scale is not None:
+        # pad with ones: padded channels are sliced off below, but a zero
+        # scale would turn 0 * inf-ish garbage into NaN under activations
+        scalep = (jnp.pad(out_scale, (0, Np - N), constant_values=1.0)
+                  if Np != N else out_scale)
     out = _mm.matmul(
         ap,
         bp,
         biasp,
+        scalep,
         bm=plan.bm,
         bk=plan.bk,
         bn=plan.bn,

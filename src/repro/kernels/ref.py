@@ -36,12 +36,19 @@ def matmul_ref(
     b_layout: str = "row",
     bias: jax.Array | None = None,
     activation: str | None = None,
+    out_scale: jax.Array | None = None,
 ) -> jax.Array:
-    """Oracle GEMM: C = act(A @ B + bias), cast to ``out_dtype``.
+    """Oracle GEMM: C = act(A @ B * out_scale + bias), cast to ``out_dtype``.
 
     ``b_layout='col'`` means ``b`` is stored as (N, K) — i.e. B^T — matching
     the paper's column-major B option. The contraction is then over b's last
     axis (the in-register-transpose analog of the AIE shuffle path).
+
+    ``out_scale`` is the per-output-channel (N,) requantization multiplier of
+    the quantized path, applied to the accumulator *before* the bias add —
+    ``bias`` stays in real (dequantized) f32 units, never the i32 domain
+    (where small scales would overflow). The scaled-and-biased result is
+    rounded before a saturating integer cast.
     """
     acc = _acc_dtype(a.dtype)
     if out_dtype is None:
@@ -53,10 +60,14 @@ def matmul_ref(
     else:
         raise ValueError(f"b_layout must be 'row' or 'col', got {b_layout!r}")
     out = jax.lax.dot_general(a, b, dim_nums, preferred_element_type=acc)
+    if out_scale is not None:
+        out = out.astype(jnp.float32) * out_scale.astype(jnp.float32)
     if bias is not None:
-        out = out + bias.astype(acc)
+        out = out + bias.astype(out.dtype)
     if activation is not None:
         out = apply_activation(out, activation)
+    if out_scale is not None and jnp.issubdtype(out_dtype, jnp.integer):
+        out = jnp.round(out)
     return saturating_cast(out, out_dtype)
 
 

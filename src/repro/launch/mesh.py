@@ -12,14 +12,15 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_auto_mesh, mesh_from_devices
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_local_mesh(data: int | None = None, model: int = 1) -> Mesh:
@@ -28,5 +29,4 @@ def make_local_mesh(data: int | None = None, model: int = 1) -> Mesh:
     if data is None:
         data = n // model
     devs = np.array(jax.devices()[: data * model]).reshape(data, model)
-    return Mesh(devs, ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    return mesh_from_devices(devs, ("data", "model"))

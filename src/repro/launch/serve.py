@@ -53,9 +53,13 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--matmul-backend", default="xla")
+    ap.add_argument("--quantize", default="none", choices=["none", "int8"],
+                    help="int8: route every projection through the W8A8 "
+                         "balanced-GEMM path (fused requantize epilogue)")
     args = ap.parse_args()
 
     cm.set_matmul_backend(args.matmul_backend)
+    cm.set_quant_mode(args.quantize)
     cfg = C.get_config(args.arch)
     if args.smoke:
         cfg = C.smoke(cfg)
@@ -82,7 +86,8 @@ def main():
                       extras=extras)
     dt = time.perf_counter() - t0
     toks = args.batch * args.gen
-    print(f"[serve] arch={cfg.name} generated {toks} tokens in {dt:.2f}s "
+    qtag = f" quant={args.quantize}" if args.quantize != "none" else ""
+    print(f"[serve] arch={cfg.name}{qtag} generated {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s incl. compile)")
     print("first row:", np.asarray(out[0])[:12], "...")
 

@@ -31,6 +31,23 @@ def get_matmul_backend() -> str:
     return _MATMUL_BACKEND
 
 
+# Framework-wide quantization mode: None (full precision) or 'int8' (dynamic
+# W8A8 — every dense() routes through the int8 balanced-GEMM path with the
+# fused requantize epilogue). Set by the serve launcher (--quantize int8).
+_QUANT_MODE: str | None = None
+
+
+def set_quant_mode(mode: str | None) -> None:
+    if mode not in (None, "none", "int8"):
+        raise ValueError(f"quant mode must be None|'none'|'int8', got {mode!r}")
+    global _QUANT_MODE
+    _QUANT_MODE = None if mode == "none" else mode
+
+
+def get_quant_mode() -> str | None:
+    return _QUANT_MODE
+
+
 def dense(
     x: jax.Array,
     w: jax.Array,
@@ -41,6 +58,13 @@ def dense(
 ) -> jax.Array:
     """x @ w (+bias, +activation) through the balanced-GEMM substrate."""
     out_dtype = out_dtype or x.dtype
+    if _QUANT_MODE == "int8" and not jnp.issubdtype(x.dtype, jnp.integer):
+        from repro.layers import quantized as qz
+
+        return qz.dynamic_qdense(
+            x, w, bias, activation=activation, out_dtype=out_dtype,
+            backend=_MATMUL_BACKEND,
+        )
     return balanced_gemm(
         x, w, bias, out_dtype=out_dtype, activation=activation,
         backend=_MATMUL_BACKEND,
@@ -55,8 +79,9 @@ def embed_lookup(table: jax.Array, ids: jax.Array, mesh=None) -> jax.Array:
     model-rank gathers its local rows (out-of-range ids masked to zero) and
     the shards psum — traffic is (B, S, d) activations, not the table.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return jnp.take(table, ids, axis=0)

@@ -21,7 +21,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.layers import common as cm

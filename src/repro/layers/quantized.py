@@ -1,0 +1,201 @@
+"""W8A8 quantized layer path through the balanced-GEMM substrate.
+
+``QuantizedLinear`` stores weights as int8 in the **(N, K) column-major
+layout** — the paper's B^T option (§4.3): the kernel's index map walks the
+transposed array and the MXU contracts in-register, so int8 weight reads are
+bk-long contiguous HBM runs. Activations are quantized per-tensor on the fly
+(dynamic W8A8); weights carry per-output-channel scales.
+
+The whole dequantization happens *inside* the Pallas epilogue: the GEMM runs
+int8 x int8 -> i32 and the per-channel ``out_scale = s_x · s_w[j]`` (plus the
+saturating cast, §5.1) is applied before the single output write (§5.3.2) —
+no separate XLA rescale op ever materializes the i32 accumulator in HBM.
+
+Two output modes:
+* float out (default): ``out_scale`` dequantizes straight to bf16/f32;
+* int8 out (``out_qscale=s_out``): ``out_scale = s_x · s_w[j] / s_out`` —
+  the requantize chain for fully-quantized layer stacks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import balanced_gemm
+from repro.layers import attention as attn
+from repro.layers import common as cm
+from repro.layers.attention import AttnParams
+from repro.layers.mlp import MlpParams
+from repro.quant import int8 as qz
+
+
+class QuantizedLinear(NamedTuple):
+    """An int8 linear: y = x @ dequant(w_q) + bias.
+
+    w_q:     int8 (N, K)  — col-major (B^T) for contiguous int8 weight reads
+    w_scale: f32  (N,)    — per-output-channel symmetric scales
+    bias:    f32  (N,) | None — in real (dequantized) units
+    """
+
+    w_q: jax.Array
+    w_scale: jax.Array
+    bias: jax.Array | None
+
+
+def quantize_linear(w: jax.Array, bias: jax.Array | None = None) -> QuantizedLinear:
+    """PTQ of a (K, N) float weight to per-channel int8 in (N, K) layout."""
+    qt = qz.quantize_per_channel(w, axis=1)  # scales over N
+    return QuantizedLinear(
+        w_q=qt.q.T, w_scale=qt.scale,
+        bias=None if bias is None else bias.astype(jnp.float32),
+    )
+
+
+def qdense(
+    x: jax.Array,
+    ql: QuantizedLinear,
+    *,
+    activation: str | None = None,
+    out_dtype=None,
+    out_qscale: jax.Array | None = None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Quantized dense: per-tensor dynamic activation quant + int8 GEMM.
+
+    Returns float (``out_dtype``, default x.dtype) unless ``out_qscale`` is
+    given, in which case the epilogue requantizes to int8 at that scale.
+
+    The epilogue applies ``out_scale`` to the i32 accumulator first and adds
+    the bias in real f32 units after — so tiny scales never overflow an
+    i32-domain bias. With ``out_qscale`` the epilogue output is in s_out
+    units, so the bias is pre-divided and only scale-commuting activations
+    (relu / none) are legal: ``act(x/s) == act(x)/s`` fails for gelu/silu.
+    """
+    if backend is None:
+        backend = cm.get_matmul_backend()
+    out_dtype = out_dtype or x.dtype
+    s_x = qz.absmax_scale(x)
+    x_q = qz.quantize(x, s_x)
+    out_scale = qz.combine_scales(s_x, ql.w_scale)  # (N,)
+    bias = ql.bias
+    if out_qscale is not None:
+        if activation not in (None, "none", "relu"):
+            raise ValueError(
+                f"activation {activation!r} with out_qscale would run in the "
+                "requantized domain (act(x/s) != act(x)/s); only 'relu'/none "
+                "commute with the output scale")
+        out_scale = out_scale / out_qscale
+        if bias is not None:
+            bias = bias / out_qscale  # keep bias consistent with s_out units
+        out_dtype = jnp.int8
+    return balanced_gemm(
+        x_q, ql.w_q, bias, out_dtype=out_dtype, b_layout="col",
+        activation=activation, out_scale=out_scale, backend=backend,
+    )
+
+
+def dynamic_qdense(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    activation: str | None = None,
+    out_dtype=None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Drop-in int8 replacement for :func:`repro.layers.common.dense`.
+
+    Quantizes the (K, N) float weight per-channel and the activation
+    per-tensor inside the traced graph — the serve-time W8A8 mode that
+    ``repro.layers.common.set_quant_mode('int8')`` routes every model matmul
+    through without touching model code.
+
+    Note this demonstrates the *numerics* path, not the memory win: the
+    float weights are re-quantized in-graph every step, so per-step HBM
+    traffic still includes the f32/bf16 weight read. Production serving
+    should pre-quantize the parameter tree once at load via
+    ``quantize_linear``/``quantize_mlp``/``quantize_attn`` so only int8
+    weights stream (ROADMAP open item).
+    """
+    ql = quantize_linear(w, bias)
+    return qdense(
+        x, ql, activation=activation, out_dtype=out_dtype, backend=backend,
+    )
+
+
+# ------------------------------------------------------------------- MLP
+class QuantizedMlpParams(NamedTuple):
+    w_in: QuantizedLinear
+    w_gate: QuantizedLinear | None
+    w_out: QuantizedLinear
+
+
+def quantize_mlp(p: MlpParams) -> QuantizedMlpParams:
+    return QuantizedMlpParams(
+        w_in=quantize_linear(p.w_in, p.b_in),
+        w_gate=None if p.w_gate is None else quantize_linear(p.w_gate),
+        w_out=quantize_linear(p.w_out, p.b_out),
+    )
+
+
+def qmlp(qp: QuantizedMlpParams, x: jax.Array, *, activation: str = "silu") -> jax.Array:
+    """Quantized mirror of :func:`repro.layers.mlp.mlp`."""
+    if qp.w_gate is not None:
+        g = qdense(x, qp.w_gate, activation=activation)
+        h = qdense(x, qp.w_in)
+        h = g * h
+    else:
+        h = qdense(x, qp.w_in, activation=activation)
+    return qdense(h, qp.w_out)
+
+
+# -------------------------------------------------------------- attention
+class QuantizedAttnParams(NamedTuple):
+    wq: QuantizedLinear
+    wk: QuantizedLinear
+    wv: QuantizedLinear
+    wo: QuantizedLinear
+
+
+def quantize_attn(p: AttnParams) -> QuantizedAttnParams:
+    return QuantizedAttnParams(
+        wq=quantize_linear(p.wq, p.bq),
+        wk=quantize_linear(p.wk, p.bk),
+        wv=quantize_linear(p.wv, p.bv),
+        wo=quantize_linear(p.wo),
+    )
+
+
+def q_self_attention(
+    qp: QuantizedAttnParams,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+    causal: bool = True,
+    chunk: int | None = 1024,
+    use_rope: bool = True,
+) -> jax.Array:
+    """GQA self-attention with all four projections through the int8 path.
+
+    The attention core (online softmax over KV chunks) stays in float — the
+    paper's quantization fuses into GEMMs, and scores/probabilities are the
+    accuracy-critical non-GEMM part.
+    """
+    B, S, _ = x.shape
+    q = qdense(x, qp.wq).reshape(B, S, n_heads, head_dim)
+    k = qdense(x, qp.wk).reshape(B, S, n_kv_heads, head_dim)
+    v = qdense(x, qp.wv).reshape(B, S, n_kv_heads, head_dim)
+    if use_rope:
+        positions = jnp.arange(S)[None, :]
+        sin, cos = cm.rotary_embedding(positions, head_dim, rope_theta)
+        q = cm.apply_rotary(q, sin, cos)
+        k = cm.apply_rotary(k, sin, cos)
+    k = attn._repeat_kv(k, n_heads // n_kv_heads)
+    v = attn._repeat_kv(v, n_heads // n_kv_heads)
+    o = attn.attention_core(q, k, v, causal=causal, chunk=chunk)
+    return qdense(o.reshape(B, S, n_heads * head_dim), qp.wo)

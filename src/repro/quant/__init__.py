@@ -1,0 +1,36 @@
+"""Post-training int8 quantization for the balanced-GEMM stack.
+
+The paper's headline int8 numbers (6.76 / 38.05 TOPS, §5.1) come from int8
+inputs, i32 accumulation, and a fused saturating requantize epilogue. This
+package provides the quantization front-end that makes that path usable for
+inference:
+
+* :mod:`repro.quant.int8` — symmetric int8 calibration (per-tensor and
+  per-channel), ``quantize``/``dequantize``, scale propagation;
+* :mod:`repro.layers.quantized` — the ``QuantizedLinear`` layer path that
+  routes MLP / attention projections through ``balanced_gemm`` with the
+  per-channel requantization applied inside the Pallas kernel epilogue.
+"""
+from repro.quant.int8 import (
+    QMAX,
+    Calibrator,
+    QTensor,
+    absmax_scale,
+    combine_scales,
+    dequantize,
+    quantize,
+    quantize_per_channel,
+    quantize_per_tensor,
+)
+
+__all__ = [
+    "QMAX",
+    "Calibrator",
+    "QTensor",
+    "absmax_scale",
+    "combine_scales",
+    "dequantize",
+    "quantize",
+    "quantize_per_channel",
+    "quantize_per_tensor",
+]

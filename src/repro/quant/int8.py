@@ -1,0 +1,120 @@
+"""Symmetric int8 quantization: calibration, quantize/dequantize, scales.
+
+Conventions (docs/quantization.md):
+
+* **Symmetric, zero-point-free.** ``q = clip(round(x / scale), -127, 127)``,
+  ``x ≈ q * scale``. The representable range is ±127 (−128 is never
+  produced), so the int8 GEMM's i32 accumulator bound is K · 127² and the
+  saturating epilogue (§5.1) is the only clipping point.
+* **Per-tensor** scales are scalars (); **per-channel** scales carry one
+  entry per *output channel* — for a (K, N) weight that is axis=1, shape
+  (N,), which lands on the GEMM's N dimension so the fused epilogue can
+  apply it per output column in-kernel.
+* Scale propagation through C = A·B: ``c_real ≈ acc_i32 · (s_a · s_b)``.
+  Requantizing C to int8 at scale ``s_c`` multiplies the accumulator by
+  ``s_a · s_b / s_c`` — exactly the ``out_scale`` the balanced-GEMM epilogue
+  consumes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127  # symmetric: the int8 grid is [-127, 127]
+_EPS = 1e-12
+
+
+def _absmax(x: jax.Array, axis: int | None) -> jax.Array:
+    """abs-max of x: over everything (axis=None) or per channel on ``axis``."""
+    x = jnp.abs(jnp.asarray(x, jnp.float32))
+    if axis is None:
+        return jnp.max(x)
+    red = tuple(d for d in range(x.ndim) if d != axis % x.ndim)
+    return jnp.max(x, axis=red)
+
+
+def absmax_scale(x: jax.Array, axis: int | None = None) -> jax.Array:
+    """Symmetric absmax calibration scale.
+
+    axis=None -> per-tensor scalar scale; axis=i -> per-channel scales for
+    channels living on axis ``i`` (reduced over every other axis).
+    """
+    return jnp.maximum(_absmax(x, axis), _EPS) / QMAX
+
+
+def quantize(x: jax.Array, scale: jax.Array, axis: int | None = None) -> jax.Array:
+    """x -> int8 on the symmetric grid. ``scale`` broadcasts per ``axis``."""
+    if axis is not None:
+        shape = [1] * x.ndim
+        shape[axis % x.ndim] = -1
+        scale = scale.reshape(shape)
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, axis: int | None = None) -> jax.Array:
+    if axis is not None:
+        shape = [1] * q.ndim
+        shape[axis % q.ndim] = -1
+        scale = scale.reshape(shape)
+    return q.astype(jnp.float32) * scale
+
+
+class QTensor(NamedTuple):
+    """An int8 tensor with its (per-tensor or per-channel) scale.
+
+    ``scale`` is () for per-tensor or (n_channels,) for per-channel; the
+    channel axis is a convention of the consumer (weights store N-channel
+    scales, activations are per-tensor).
+    """
+
+    q: jax.Array       # int8
+    scale: jax.Array   # f32, () or (C,)
+
+
+def quantize_per_tensor(x: jax.Array) -> QTensor:
+    s = absmax_scale(x)
+    return QTensor(q=quantize(x, s), scale=s)
+
+
+def quantize_per_channel(x: jax.Array, axis: int) -> QTensor:
+    s = absmax_scale(x, axis=axis)
+    return QTensor(q=quantize(x, s, axis=axis), scale=s)
+
+
+class Calibrator:
+    """Running absmax observer for post-training calibration.
+
+    Feed representative batches through ``observe``; ``scale()`` yields the
+    final symmetric scale. Host-side (numpy-compatible) by design — this is
+    the offline PTQ step, not a traced op.
+
+        cal = Calibrator(axis=1)        # per-channel over axis 1
+        for batch in data: cal.observe(batch)
+        s = cal.scale()
+    """
+
+    def __init__(self, axis: int | None = None):
+        self.axis = axis
+        self._amax: jax.Array | None = None
+
+    def observe(self, x: jax.Array) -> "Calibrator":
+        amax = _absmax(x, self.axis)
+        self._amax = amax if self._amax is None else jnp.maximum(self._amax, amax)
+        return self
+
+    def scale(self) -> jax.Array:
+        if self._amax is None:
+            raise ValueError("Calibrator.scale() before any observe()")
+        return jnp.maximum(self._amax, _EPS) / QMAX
+
+
+def combine_scales(*scales: jax.Array) -> jax.Array:
+    """Product of scales with broadcasting — the GEMM scale propagation rule
+    ``s_out = s_a · s_b`` (per-channel factors broadcast over per-tensor)."""
+    out = scales[0]
+    for s in scales[1:]:
+        out = out * s
+    return out

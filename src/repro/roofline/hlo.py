@@ -192,7 +192,9 @@ def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
     out_elems = 1
     for d in _shape_dims(op.type_str):
         out_elems *= d
-    lhs_m = re.match(r"\s*%([\w.\-]+)", op.rest)
+    # Operands print as `%name` (new XLA) or `f32[...]{...} %name` (old XLA);
+    # the first %-reference in either format is the lhs.
+    lhs_m = re.search(r"%([\w.\-]+)", op.rest)
     contract = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
     if not lhs_m or not contract:
         return 0.0

@@ -21,13 +21,13 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import Mesh, AxisType
+from repro.compat import mesh_from_devices
 import sys
 
 results = {}
 
 devs = np.array(jax.devices()).reshape(4, 2)
-mesh = Mesh(devs, ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = mesh_from_devices(devs, ("data", "model"))
 
 # ---- 1. output-stationary distributed GEMM == local matmul
 from repro.core.distributed import output_stationary_gemm, k_sharded_gemm
@@ -76,8 +76,8 @@ from repro.train.trainstep import make_train_step
 from repro.data.synthetic import batch_for
 cfg = C.smoke(C.get_config("internlm2-20b"))
 art = make_train_step(cfg, mesh)
-mesh1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"),
-             axis_types=(AxisType.Auto,) * 2)
+mesh1 = mesh_from_devices(np.array(jax.devices()[:1]).reshape(1, 1),
+                          ("data", "model"))
 art1 = make_train_step(cfg, mesh1)
 b = {k: jnp.asarray(v) for k, v in batch_for(cfg, 32, 8, 0).items()}
 with mesh:

@@ -1,0 +1,260 @@
+"""int8 quantization path: calibration, fused requantize epilogue, layers,
+and the solver's int8-specific balanced points."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import balance, perfmodel as pm
+from repro.kernels import ops, ref
+from repro.layers import attention as A
+from repro.layers import common as cm
+from repro.layers import mlp as M
+from repro.layers import quantized as Q
+from repro.quant import (
+    QMAX, Calibrator, absmax_scale, combine_scales, dequantize, quantize,
+    quantize_per_channel, quantize_per_tensor,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def _randf(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32)
+
+
+# ------------------------------------------------------------ calibration
+def test_quantize_dequantize_roundtrip_per_tensor():
+    x = _randf((64, 48))
+    qt = quantize_per_tensor(x)
+    assert qt.q.dtype == jnp.int8 and qt.scale.shape == ()
+    err = jnp.max(jnp.abs(dequantize(qt.q, qt.scale) - x))
+    # symmetric grid: max rounding error is scale/2
+    assert float(err) <= float(qt.scale) / 2 + 1e-7
+
+
+def test_quantize_per_channel_tracks_channel_ranges():
+    # channel 0 tiny, channel 1 huge: per-channel scales must differ by ~1000x
+    w = jnp.stack([_randf((128,), 0.001), _randf((128,), 1.0)], axis=1)
+    qt = quantize_per_channel(w, axis=1)
+    assert qt.scale.shape == (2,)
+    assert float(qt.scale[1] / qt.scale[0]) > 100
+    rel = jnp.linalg.norm(dequantize(qt.q, qt.scale, axis=1) - w) \
+        / jnp.linalg.norm(w)
+    assert float(rel) < 0.01
+
+
+def test_quantize_never_emits_minus_128():
+    x = jnp.asarray([[-1e9, 1e9, 0.0, -0.3]], jnp.float32)
+    q = quantize(x, absmax_scale(x))
+    assert int(q.min()) >= -QMAX and int(q.max()) <= QMAX
+
+
+def test_calibrator_running_absmax():
+    cal = Calibrator(axis=1)
+    cal.observe(jnp.asarray([[1.0, -2.0], [0.5, 0.1]]))
+    cal.observe(jnp.asarray([[-3.0, 0.2], [0.0, 0.0]]))
+    np.testing.assert_allclose(
+        np.asarray(cal.scale()), np.array([3.0, 2.0]) / QMAX, rtol=1e-6)
+    with pytest.raises(ValueError):
+        Calibrator().scale()
+
+
+# -------------------------------------------- fused requantize epilogue
+@pytest.mark.parametrize("out_dtype", [jnp.int8, jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b_layout", ["row", "col"])
+def test_epilogue_per_channel_scale_matches_oracle(out_dtype, b_layout):
+    """The Pallas kernel's in-epilogue per-channel requantization must match
+    the jnp oracle bit-for-bit (int out) / exactly (float out)."""
+    M_, K_, N_ = 50, 300, 70
+    a = jnp.asarray(RNG.integers(-100, 100, size=(M_, K_)), jnp.int8)
+    bshape = (N_, K_) if b_layout == "col" else (K_, N_)
+    b = jnp.asarray(RNG.integers(-100, 100, size=bshape), jnp.int8)
+    scale = jnp.asarray(RNG.uniform(1e-4, 1e-2, size=(N_,)), jnp.float32)
+    got = ops.balanced_matmul(
+        a, b, plan=ops.GemmPlan(32, 128, 128), out_dtype=out_dtype,
+        b_layout=b_layout, out_scale=scale, backend="interpret")
+    want = ref.matmul_ref(
+        a, b, out_dtype=out_dtype, b_layout=b_layout, out_scale=scale)
+    assert got.dtype == want.dtype and got.shape == (M_, N_)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_epilogue_scale_with_real_units_bias():
+    """With out_scale, bias is in real f32 units, added after the scale."""
+    a = jnp.asarray(RNG.integers(-100, 100, size=(33, 256)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-100, 100, size=(256, 130)), jnp.int8)
+    bias = jnp.asarray(RNG.normal(size=(130,)), jnp.float32)
+    scale = jnp.asarray(RNG.uniform(1e-4, 1e-3, size=(130,)), jnp.float32)
+    got = ops.balanced_matmul(
+        a, b, bias, plan=ops.GemmPlan(32, 128, 128), out_dtype=jnp.int8,
+        out_scale=scale, backend="interpret")
+    want = ref.matmul_ref(a, b, bias=bias, out_dtype=jnp.int8,
+                          out_scale=scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qdense_bias_survives_tiny_scales():
+    """Regression: an i32-domain bias fold overflows when the activation and
+    weight scales are tiny (bias/scale >> 2^31); the real-units bias path
+    must stay accurate."""
+    x = _randf((16, 64), 0.001)
+    w = _randf((64, 32), 0.0001)
+    bias = _randf((32,), 3.0)
+    ql = Q.quantize_linear(w, bias)
+    want = x @ w + bias
+    got = Q.qdense(x, ql)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.02, rel
+
+
+def test_qdense_rejects_noncommuting_activation_with_out_qscale():
+    """Regression: gelu/silu in the requantized (/s_out) domain is wrong —
+    only scale-commuting activations may combine with out_qscale."""
+    x = _randf((16, 64))
+    w = _randf((64, 32), 0.1)
+    ql = Q.quantize_linear(w)
+    s_out = absmax_scale(jnp.maximum(x @ w, 0))
+    with pytest.raises(ValueError, match="commute"):
+        Q.qdense(x, ql, activation="silu", out_qscale=s_out)
+    # relu commutes with positive scales: act(x/s) == act(x)/s
+    q = Q.qdense(x, ql, activation="relu", out_qscale=s_out)
+    want = jnp.maximum(x @ w, 0)
+    rel = float(jnp.linalg.norm(dequantize(q, s_out) - want)
+                / jnp.linalg.norm(want))
+    assert rel < 0.03, rel
+
+
+def test_epilogue_saturates_at_plus_minus_127():
+    """±127 clipping edges: a scale that maps the accumulator beyond the int8
+    range must clip, not wrap."""
+    a = jnp.full((32, 128), 100, jnp.int8)
+    b_pos = jnp.full((128, 128), 100, jnp.int8)
+    b_neg = jnp.full((128, 128), -100, jnp.int8)
+    one = jnp.ones((128,), jnp.float32)
+    got_hi = ops.balanced_matmul(
+        a, b_pos, plan=ops.GemmPlan(32, 128, 128), out_dtype=jnp.int8,
+        out_scale=one, backend="interpret")
+    got_lo = ops.balanced_matmul(
+        a, b_neg, plan=ops.GemmPlan(32, 128, 128), out_dtype=jnp.int8,
+        out_scale=one, backend="interpret")
+    assert np.all(np.asarray(got_hi) == 127)
+    assert np.all(np.asarray(got_lo) == -128)  # i32 acc clips at iinfo.min
+
+
+def test_epilogue_rounds_to_nearest_even():
+    # acc = 1 everywhere; scale 2.5 -> rounds to 2 (ties-to-even), not 3
+    a = jnp.ones((32, 128), jnp.int8)
+    b = jnp.eye(128, dtype=jnp.int8)[:128]
+    acc = ops.balanced_matmul(
+        a, b, plan=ops.GemmPlan(32, 128, 128), out_dtype=jnp.int8,
+        out_scale=jnp.full((128,), 2.5, jnp.float32), backend="interpret")
+    assert np.all(np.asarray(acc) == 2)
+
+
+# ------------------------------------------------------- quantized layers
+def test_qdense_matches_f32_reference():
+    x = _randf((64, 128))
+    w = _randf((128, 96), 0.05)
+    bias = _randf((96,), 0.1)
+    ql = Q.quantize_linear(w, bias)
+    want = x @ w + bias
+    got = Q.qdense(x, ql)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.02, rel
+    # pallas interpret path bit-matches the xla path
+    got_i = Q.qdense(x, ql, backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(got_i), np.asarray(got), atol=1e-5)
+
+
+def test_qdense_int8_output_requantize_chain():
+    x = _randf((32, 64))
+    w = _randf((64, 48), 0.1)
+    ql = Q.quantize_linear(w)
+    want = x @ w
+    s_out = absmax_scale(want)
+    q = Q.qdense(x, ql, out_qscale=s_out)
+    assert q.dtype == jnp.int8
+    rel = float(jnp.linalg.norm(dequantize(q, s_out) - want)
+                / jnp.linalg.norm(want))
+    assert rel < 0.03, rel
+
+
+def test_quantized_mlp_and_attention_accuracy():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
+    p = M.init_mlp(key, 64, 128, gated=True)
+    want = M.mlp(p, x)
+    got = Q.qmlp(Q.quantize_mlp(p), x)
+    assert float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want)) < 0.1
+    ap = A.init_attn(key, 64, 4, 2, 16)
+    want = A.self_attention(ap, x, n_heads=4, n_kv_heads=2, head_dim=16)
+    got = Q.q_self_attention(
+        Q.quantize_attn(ap), x, n_heads=4, n_kv_heads=2, head_dim=16)
+    assert float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want)) < 0.1
+
+
+def test_quant_mode_routes_dense_through_int8():
+    x = _randf((8, 32))
+    w = _randf((32, 16), 0.1)
+    want = cm.dense(x, w)
+    try:
+        cm.set_quant_mode("int8")
+        got = cm.dense(x, w)
+    finally:
+        cm.set_quant_mode(None)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert 0 < rel < 0.05  # quantized: close to but not identical to f32
+    with pytest.raises(ValueError):
+        cm.set_quant_mode("int4")
+
+
+def test_scale_combination_broadcasts():
+    s = combine_scales(jnp.float32(0.5), jnp.asarray([1.0, 2.0], jnp.float32))
+    np.testing.assert_allclose(np.asarray(s), [0.5, 1.0])
+
+
+# ----------------------------------------------------------- solver / perf
+def test_int8_plan_differs_from_bf16_plan():
+    """Eq. 5 is a byte budget: itemsize-1 admits longer bk, and the doubled
+    MAC rate moves the compute/memory crossover — the solver must land on a
+    different balanced point (the paper's Table 2 vs Table 3)."""
+    M_, K_, N_ = 4096, 4096, 4096
+    p8 = balance.solve_exhaustive(
+        M_, K_, N_, in_dtype=jnp.int8, out_dtype=jnp.int8).plan
+    p16 = balance.solve_exhaustive(
+        M_, K_, N_, in_dtype=jnp.bfloat16, out_dtype=jnp.bfloat16).plan
+    assert p8 != p16
+
+
+def test_int8_throughput_at_least_bf16():
+    for n in (512, 2048, 4096):
+        t8 = balance.solve_exhaustive(
+            n, n, n, in_dtype=jnp.int8, out_dtype=jnp.int8).tops
+        t16 = balance.solve_exhaustive(
+            n, n, n, in_dtype=jnp.bfloat16, out_dtype=jnp.bfloat16).tops
+        assert t8 >= t16, (n, t8, t16)
+
+
+def test_candidate_blocks_scale_with_itemsize():
+    _, bks1, _ = balance.candidate_blocks(1)
+    _, bks2, _ = balance.candidate_blocks(2)
+    _, bks4, _ = balance.candidate_blocks(4)
+    assert max(bks1) == 2 * max(bks2) == 4 * max(bks4)
+
+
+def test_peak_flops_table():
+    hw = pm.TPU_V5E
+    assert hw.peak_flops(jnp.int8) == hw.peak_flops_int8
+    assert hw.peak_flops(jnp.bfloat16) == hw.peak_flops_bf16
+    assert hw.peak_flops(jnp.float32) < hw.peak_flops_bf16
+
+
+def test_plan_cache_keys_on_dtype():
+    from repro.core import gemm
+    gemm.clear_plan_cache()
+    p8 = gemm.plan_for(4096, 4096, 4096, in_dtype=jnp.int8)
+    p16 = gemm.plan_for(4096, 4096, 4096, in_dtype=jnp.bfloat16)
+    assert p8 != p16
+    assert gemm.plan_for(4096, 4096, 4096, in_dtype=jnp.int8) is p8
