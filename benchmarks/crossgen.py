@@ -1,0 +1,49 @@
+"""Cross-generation balanced-point sweep — the paper's Table 2 vs Table 3.
+
+The paper's central argument is that one methodology produces the right —
+*different* — kernel per NPU generation (XDNA's 8×4×8 MAC at one DRAM BW,
+XDNA2's doubled rate at another). With the hardware registry this falls out
+as a loop: solve the same GEMM signatures on every registered generation and
+report each one's balanced point and modeled throughput.
+
+Rows: crossgen/<gen>/<precision> with the solved tile and end-to-end TOPS;
+plus a summary row per precision asserting the newest generation is never
+modeled slower than the oldest (sanity on the registry constants).
+"""
+import jax.numpy as jnp
+
+from repro.core import balance
+from repro.core.hwregistry import get_hw, list_hw
+
+GEMM = (4096, 4096, 4096)
+PRECISIONS = [
+    ("bf16-bf16", jnp.bfloat16, jnp.bfloat16),
+    ("int8-int8", jnp.int8, jnp.int8),
+]
+
+
+def run(emit):
+    M, K, N = GEMM
+    for pname, din, dout in PRECISIONS:
+        by_gen = {}
+        for gen in list_hw():
+            hw = get_hw(gen)
+            res = balance.solve_exhaustive(
+                M, K, N, hw=hw, in_dtype=din, out_dtype=dout)
+            by_gen[gen] = res
+            p = res.plan
+            emit(
+                f"crossgen/{gen}/{pname}",
+                derived=(f"tile={p.bm}x{p.bk}x{p.bn} tops={res.tops:.1f} "
+                         f"balanced={res.balanced}"),
+            )
+        gens = sorted(by_gen, key=lambda g: by_gen[g].tops)
+        emit(
+            f"crossgen/summary/{pname}",
+            derived=(f"slowest={gens[0]}({by_gen[gens[0]].tops:.0f}) "
+                     f"fastest={gens[-1]}({by_gen[gens[-1]].tops:.0f}) "
+                     f"distinct_plans="
+                     f"{len({by_gen[g].plan for g in by_gen})}"),
+        )
+        # registry sanity: the newer generation never models slower
+        assert by_gen["tpu_v6e"].tops >= by_gen["tpu_v5e"].tops, pname

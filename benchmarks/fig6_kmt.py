@@ -9,6 +9,7 @@ over: smaller native size = less padding waste on ragged GEMMs).
 import jax.numpy as jnp
 
 from repro.core import perfmodel as pm
+from repro.core.context import current_context
 
 GEMM = (4096, 4096, 4096)
 SAT = 0.99
@@ -38,7 +39,7 @@ def knee(rows):
 
 
 def run(emit):
-    hw = pm.TPU_V5E
+    hw = current_context().hw
     for name, din, (bm, bn) in [
         ("bf16-bf16", jnp.bfloat16, (512, 512)),
         ("int8-int16", jnp.int8, (512, 512)),

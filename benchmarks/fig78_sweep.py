@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import balance, perfmodel as pm
+from repro.core.context import current_context
 
 SIZES = [128, 256, 512, 768, 1024, 1536, 2048, 3072, 4096, 8192]
 
@@ -38,7 +39,7 @@ def _sweep(hw, plan, din, dout, layout):
 
 
 def run(emit):
-    hw = pm.TPU_V5E
+    hw = current_context().hw
     for name, din, dout in [
         ("int8-int8", jnp.int8, jnp.int8),
         ("bf16-bf16", jnp.bfloat16, jnp.bfloat16),

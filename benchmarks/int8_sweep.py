@@ -13,12 +13,13 @@ the bf16 bytes — Eq. 8).
 import jax.numpy as jnp
 
 from repro.core import balance, perfmodel as pm
+from repro.core.context import current_context
 
 SIZES = [512, 1024, 2048, 4096, 8192]
 
 
 def run(emit):
-    hw = pm.TPU_V5E
+    hw = current_context().hw
     for n in SIZES:
         M = K = N = n
         res8 = balance.solve_exhaustive(

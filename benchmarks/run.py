@@ -1,15 +1,28 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. TOPS numbers are TPU-v5e
-analytical-model projections (this container is CPU-only); ``us_per_call``
-columns are real measured wall-clock where the module measures one.
+Prints ``name,us_per_call,derived`` CSV rows. TOPS numbers are analytical-
+model projections for the active hardware generation (``--hw``, default
+tpu_v5e; this container is CPU-only); ``us_per_call`` columns are real
+measured wall-clock where the module measures one.
 
-  PYTHONPATH=src python -m benchmarks.run [--only table1,fig6]
+``--json BENCH_<tag>.json`` additionally writes a machine-readable result
+file (per row: name, us_per_call, modeled TOPS where the row reports one,
+raw derived string, plus the hw generation) so the perf trajectory is
+trackable across PRs.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig6] \
+      [--hw tpu_v6e] [--json BENCH_table1.json]
 """
 import argparse
+import json
+import re
 import sys
 import time
 import traceback
+
+# modules report modeled throughput as either "tops=123.4" (end-to-end) or
+# "tput=123.4TOPS" (single-kernel attained); surface whichever one is there
+_TOPS_RE = re.compile(r"(?:^|[ /])(?:tops|tput)=([0-9.]+)")
 
 
 def _emitter(rows):
@@ -19,18 +32,40 @@ def _emitter(rows):
     return emit
 
 
+def _json_payload(rows, hw_name: str) -> dict:
+    results = []
+    for name, us, derived in rows:
+        m = _TOPS_RE.search(derived)
+        results.append({
+            "name": name,
+            "us_per_call": None if us != us else us,  # NaN -> null
+            "tops": float(m.group(1)) if m else None,
+            "derived": derived,
+            "hw": hw_name,
+        })
+    return {"hw": hw_name, "results": results}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys to run")
+    ap.add_argument("--hw", default=None,
+                    help="hardware generation (default: context/REPRO_HW)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as machine-readable JSON")
     args = ap.parse_args()
 
-    from benchmarks import (fig6_kmt, fig78_sweep, int8_sweep, roofline_cells,
-                            sec532_buffering, sec533_overlap, table1_kernel,
-                            table23_balanced, wallclock)
+    from repro.core.context import use_context
+    from repro.core.context import resolve_hw
+
+    from benchmarks import (crossgen, fig6_kmt, fig78_sweep, int8_sweep,
+                            roofline_cells, sec532_buffering, sec533_overlap,
+                            table1_kernel, table23_balanced, wallclock)
     modules = {
         "table1": [table1_kernel.run],
         "table23": [table23_balanced.run, table23_balanced.run_skinny],
+        "crossgen": [crossgen.run],
         "fig6": [fig6_kmt.run],
         "fig78": [fig78_sweep.run],
         "int8": [int8_sweep.run],
@@ -44,20 +79,25 @@ def main() -> None:
     emit = _emitter(rows)
     print("name,us_per_call,derived")
     failures = 0
-    for key, fns in modules.items():
-        if key not in only:
-            continue
-        for fn in fns:
-            t0 = time.time()
-            try:
-                fn(emit)
-            except Exception as e:
-                failures += 1
-                print(f"{key},nan,FAILED: {type(e).__name__}: {e}",
+    with use_context(hw=resolve_hw(args.hw)) as ctx:
+        for key, fns in modules.items():
+            if key not in only:
+                continue
+            for fn in fns:
+                t0 = time.time()
+                try:
+                    fn(emit)
+                except Exception as e:
+                    failures += 1
+                    print(f"{key},nan,FAILED: {type(e).__name__}: {e}",
+                          file=sys.stderr)
+                    traceback.print_exc(limit=3)
+                print(f"# {key}/{fn.__name__} took {time.time()-t0:.1f}s",
                       file=sys.stderr)
-                traceback.print_exc(limit=3)
-            print(f"# {key}/{fn.__name__} took {time.time()-t0:.1f}s",
-                  file=sys.stderr)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(_json_payload(rows, ctx.hw.name), f, indent=1)
+            print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -9,13 +9,14 @@ compare end-to-end throughput.
 import jax.numpy as jnp
 
 from repro.core import balance, perfmodel as pm
+from repro.core.context import current_context
 from repro.kernels import matmul as mm
 
 GEMM = (4096, 4096, 4096)
 
 
 def run(emit):
-    hw = pm.TPU_V5E
+    hw = current_context().hw
     M, K, N = GEMM
     orig = mm.vmem_bytes
     for name, din, dout in [("bf16-bf16", jnp.bfloat16, jnp.bfloat16),

@@ -10,10 +10,11 @@ near the balanced point overlap approaches its maximum 2× gain; the paper's
 import jax.numpy as jnp
 
 from repro.core import balance, perfmodel as pm
+from repro.core.context import current_context
 
 
 def run(emit):
-    hw = pm.TPU_V5E
+    hw = current_context().hw
     for name, (M, K, N) in [
         ("4k-square", (4096, 4096, 4096)),
         ("skinny-decode", (32, 8192, 8192)),

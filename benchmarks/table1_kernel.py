@@ -9,6 +9,7 @@ all of local memory (paper: 94–97 % of L1).
 import jax.numpy as jnp
 
 from repro.core import balance, perfmodel as pm
+from repro.core.context import current_context
 
 PRECISIONS = [
     ("int8-int8", jnp.int8, jnp.int8),
@@ -19,7 +20,7 @@ PRECISIONS = [
 
 
 def run(emit):
-    hw = pm.TPU_V5E
+    hw = current_context().hw
     for name, din, dout in PRECISIONS:
         r = balance.solve_single_core(hw=hw, in_dtype=din, out_dtype=dout)
         plan = r.plan

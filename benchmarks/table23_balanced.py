@@ -10,13 +10,14 @@ end-to-end TOPS — the faithful reproduction of the paper's Table 2/3
 import jax.numpy as jnp
 
 from repro.core import balance, perfmodel as pm
+from repro.core.context import current_context
 from benchmarks.table1_kernel import PRECISIONS
 
 GEMM = (4096, 4096, 4096)
 
 
 def run(emit):
-    hw = pm.TPU_V5E
+    hw = current_context().hw
     M, K, N = GEMM
     for name, din, dout in PRECISIONS:
         sc = balance.solve_single_core(hw=hw, in_dtype=din, out_dtype=dout)
@@ -64,7 +65,7 @@ def run(emit):
 def run_skinny(emit):
     """The regime where balance genuinely matters on TPU: skinny GEMMs
     (decode/serving shapes) are memory-bound at the compute-optimal tile."""
-    hw = pm.TPU_V5E
+    hw = current_context().hw
     for (M, K, N) in [(256, 8192, 8192), (64, 8192, 28672), (32, 4096, 4096)]:
         sc = balance.solve_single_core(hw=hw, in_dtype=jnp.bfloat16)
         est_sc = pm.estimate_gemm(hw, M, K, N, sc.plan.bm, sc.plan.bk,

@@ -1,25 +1,42 @@
 """The paper's primary contribution: balanced-point GEMM optimization.
 
-perfmodel.py   — analytical model (Eqs. 1–10, TPU constants, roofline terms)
+perfmodel.py   — analytical model (Eqs. 1–10, roofline terms)
+hwregistry.py  — named hardware generations (the XDNA→XDNA2 axis)
+context.py     — GemmContext: hw/backend/quant/mesh/plan-cache execution state
+plancache.py   — versioned on-disk plan cache (§5.3.1 plan reuse)
 tiling.py      — multi-level TileConfig (intrinsic → block → array → problem)
 balance.py     — §4.5.1 single-core IP + §4.5.2 balanced-point iteration
 autotune.py    — measured-feedback driver (paper loop + neighbor hillclimb)
-gemm.py        — public balanced_gemm() with plan caching
+gemm.py        — public balanced_gemm() with unified dispatch + plan_model()
 distributed.py — mesh-level output-stationary GEMM + K-sharded foil
 """
-from repro.core.balance import solve_balanced, solve_single_core
-from repro.core.gemm import balanced_gemm, plan_for
+from repro.core.balance import solve_balanced, solve_exhaustive, solve_single_core
+from repro.core.context import GemmContext, current_context, use_context
+from repro.core.gemm import balanced_gemm, plan_for, plan_model
+from repro.core.hwregistry import TPU_V4, TPU_V6E, get_hw, list_hw, register_hw
 from repro.core.perfmodel import TPU_V5E, HardwareSpec, RooflineTerms, roofline_terms
+from repro.core.plancache import PlanCache
 from repro.core.tiling import TileConfig
 
 __all__ = [
+    "TPU_V4",
     "TPU_V5E",
+    "TPU_V6E",
+    "GemmContext",
     "HardwareSpec",
+    "PlanCache",
     "RooflineTerms",
     "TileConfig",
     "balanced_gemm",
+    "current_context",
+    "get_hw",
+    "list_hw",
     "plan_for",
+    "plan_model",
+    "register_hw",
     "roofline_terms",
     "solve_balanced",
+    "solve_exhaustive",
     "solve_single_core",
+    "use_context",
 ]

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import balance, perfmodel as pm
+from repro.core.context import resolve_hw
 from repro.kernels.matmul import LANE, SUBLANE, vmem_bytes
 from repro.kernels.ops import GemmPlan, balanced_matmul
 
@@ -36,10 +37,11 @@ class TuneResult:
 
 
 def model_measure_fn(
-    M: int, K: int, N: int, *, hw=pm.TPU_V5E, in_dtype=jnp.bfloat16,
+    M: int, K: int, N: int, *, hw=None, in_dtype=jnp.bfloat16,
     out_dtype=None, b_layout="row", m_rows=1, n_cols=1,
 ) -> Callable[[GemmPlan], float]:
     """Analytical-model 'measurement' (the CPU-container default)."""
+    hw = resolve_hw(hw)
 
     def fn(plan: GemmPlan) -> float:
         return pm.estimate_gemm(
@@ -103,7 +105,7 @@ def _neighbors(plan: GemmPlan, itemsize: int) -> list[GemmPlan]:
 def autotune(
     M: int, K: int, N: int,
     *,
-    hw: pm.HardwareSpec = pm.TPU_V5E,
+    hw: pm.HardwareSpec | str | None = None,
     in_dtype=jnp.bfloat16,
     out_dtype=None,
     b_layout: str = "row",
@@ -118,6 +120,7 @@ def autotune(
     Stops the refinement after ``hillclimb_rounds`` consecutive rounds with
     < ``min_gain`` relative improvement (the assignment's stopping rule).
     """
+    hw = resolve_hw(hw)
     if measure_fn is None:
         measure_fn = model_measure_fn(
             M, K, N, hw=hw, in_dtype=in_dtype, out_dtype=out_dtype,

@@ -30,6 +30,7 @@ from typing import Callable, Iterable, Sequence
 import jax.numpy as jnp
 
 from repro.core import perfmodel as pm
+from repro.core.context import resolve_hw
 from repro.kernels.matmul import LANE, SUBLANE, vmem_bytes
 from repro.kernels.ops import GemmPlan
 
@@ -73,13 +74,14 @@ class SolveResult:
 
 def solve_single_core(
     *,
-    hw: pm.HardwareSpec = pm.TPU_V5E,
+    hw: pm.HardwareSpec | str | None = None,
     in_dtype=jnp.bfloat16,
     out_dtype=None,
     b_layout: str = "row",
     vmem_budget: int | None = None,
 ) -> SolveResult:
     """§4.5.1: the compute-optimal kernel (max MACs, then min bm·bn)."""
+    hw = resolve_hw(hw)
     if out_dtype is None:
         out_dtype = in_dtype
     ty_in = jnp.dtype(in_dtype).itemsize
@@ -168,15 +170,34 @@ class BalanceResult:
     tops: float
 
     @property
+    def chosen_step(self) -> BalanceStep | None:
+        """The recorded step the returned plan came from."""
+        for s in self.steps:
+            if s.plan == self.plan:
+                return s
+        return None
+
+    def is_balanced(self, tol: float = 0.25) -> bool:
+        """Whether the chosen point actually balances compute and memory:
+        the two pipeline streams within ``tol`` relative difference. A GEMM
+        pinned to one wall (e.g. a tiny skinny decode matmul is memory-bound
+        at *every* feasible tile) correctly reports False."""
+        s = self.chosen_step
+        if s is None:
+            return False
+        hi = max(s.t_comp, s.t_mem)
+        lo = min(s.t_comp, s.t_mem)
+        return hi > 0 and (hi - lo) / hi <= tol
+
+    @property
     def balanced(self) -> bool:
-        final = self.steps[-1] if self.steps else None
-        return final is not None
+        return self.is_balanced()
 
 
 def solve_balanced(
     M: int, K: int, N: int,
     *,
-    hw: pm.HardwareSpec = pm.TPU_V5E,
+    hw: pm.HardwareSpec | str | None = None,
     in_dtype=jnp.bfloat16,
     out_dtype=None,
     b_layout: str = "row",
@@ -189,6 +210,7 @@ def solve_balanced(
     point. ``measure_fn(plan) -> seconds`` replaces the model when provided
     (the on-hardware procedure); iteration stops at the first perf drop.
     """
+    hw = resolve_hw(hw)
     if out_dtype is None:
         out_dtype = in_dtype
     ty_in = jnp.dtype(in_dtype).itemsize
@@ -240,7 +262,7 @@ def solve_balanced(
 def solve_exhaustive(
     M: int, K: int, N: int,
     *,
-    hw: pm.HardwareSpec = pm.TPU_V5E,
+    hw: pm.HardwareSpec | str | None = None,
     in_dtype=jnp.bfloat16,
     out_dtype=None,
     b_layout: str = "row",
@@ -254,6 +276,7 @@ def solve_exhaustive(
     hardware compile; with an analytical model the full sweep is free and
     immune to the walk's local optima.
     """
+    hw = resolve_hw(hw)
     if out_dtype is None:
         out_dtype = in_dtype
     ty_in = jnp.dtype(in_dtype).itemsize

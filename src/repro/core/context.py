@@ -1,0 +1,118 @@
+"""GemmContext — one object carrying the framework's execution state.
+
+Before this module, execution state was scattered: the kernel backend and
+quantization mode were module-level globals in ``layers/common.py``, the
+activation mesh was a third global, and every solver signature defaulted to
+a hard-coded ``TPU_V5E``. The context gathers all of it:
+
+* ``hw``             — the active :class:`HardwareSpec` generation
+                       (:mod:`repro.core.hwregistry`);
+* ``matmul_backend`` — 'xla' | 'pallas' | 'interpret' | 'auto' for every
+                       ``dense()``/``balanced_gemm`` call;
+* ``quant_mode``     — None | 'int8' framework-wide W8A8 routing;
+* ``mesh``           — the activation-sharding mesh recorded at trace time;
+* ``plan_cache``     — the :class:`PlanCache` serving solved GEMM plans.
+
+``current_context()`` returns the process default until a ``use_context``
+block installs an override; blocks nest and restore on exit (contextvar
+semantics, so independent asyncio tasks/threads see their own stack). The
+legacy setters in ``layers/common.py`` mutate the *current* context, which
+keeps old call sites working and makes their effects scoped by any
+enclosing ``use_context``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+from repro.core import hwregistry
+from repro.core.perfmodel import HardwareSpec
+from repro.core.plancache import PlanCache
+
+BACKENDS = ("auto", "xla", "pallas", "interpret")
+QUANT_MODES = (None, "int8")
+
+
+@dataclasses.dataclass
+class GemmContext:
+    """Mutable execution context (mutation is how the legacy setters work;
+    swap whole contexts with ``use_context`` for scoped changes)."""
+
+    hw: HardwareSpec
+    matmul_backend: str = "xla"
+    quant_mode: str | None = None
+    mesh: Any = None
+    plan_cache: PlanCache = dataclasses.field(default_factory=PlanCache)
+
+    def __post_init__(self):
+        self.hw = hwregistry.get_hw(self.hw)
+        if self.matmul_backend not in BACKENDS:
+            raise ValueError(
+                f"matmul backend must be one of {BACKENDS}, "
+                f"got {self.matmul_backend!r}")
+        if self.quant_mode == "none":
+            self.quant_mode = None
+        if self.quant_mode not in QUANT_MODES:
+            raise ValueError(
+                f"quant mode must be None|'none'|'int8', "
+                f"got {self.quant_mode!r}")
+
+
+_UNSET = object()
+_DEFAULT: GemmContext | None = None
+_CTX: contextvars.ContextVar[GemmContext | None] = contextvars.ContextVar(
+    "repro_gemm_context", default=None)
+
+
+def current_context() -> GemmContext:
+    ctx = _CTX.get()
+    if ctx is not None:
+        return ctx
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = GemmContext(hw=hwregistry.default_hw())
+    return _DEFAULT
+
+
+def resolve_hw(hw: str | HardwareSpec | None) -> HardwareSpec:
+    """The framework-wide hw-default rule: explicit arg > active context."""
+    if hw is None:
+        return current_context().hw
+    return hwregistry.get_hw(hw)
+
+
+@contextlib.contextmanager
+def use_context(
+    ctx: GemmContext | None = None,
+    *,
+    hw: str | HardwareSpec | None = None,
+    matmul_backend: str | None = None,
+    quant_mode: str | None = _UNSET,
+    mesh: Any = _UNSET,
+    plan_cache: PlanCache | None = None,
+):
+    """Install a context for the dynamic extent of the block.
+
+    With no ``ctx``, derives a copy of the current context with the given
+    overrides applied. Nested blocks restore the previous context (including
+    any legacy-setter mutations made inside) on exit.
+    """
+    if ctx is None:
+        base = current_context()
+        ctx = GemmContext(
+            hw=hwregistry.get_hw(hw) if hw is not None else base.hw,
+            matmul_backend=(matmul_backend if matmul_backend is not None
+                            else base.matmul_backend),
+            quant_mode=(base.quant_mode if quant_mode is _UNSET
+                        else quant_mode),
+            mesh=base.mesh if mesh is _UNSET else mesh,
+            plan_cache=plan_cache if plan_cache is not None
+            else base.plan_cache,
+        )
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)

@@ -1,0 +1,61 @@
+"""Shared launcher arguments: one --hw/--matmul-backend/--quantize layer.
+
+Every entry point under ``launch/`` (serve, train, dryrun) builds its
+:class:`repro.core.context.GemmContext` through here, so hardware
+generation, kernel backend, quantization mode and plan-cache location are
+selected the same way everywhere:
+
+  --hw tpu_v6e --matmul-backend pallas --quantize int8 --plan-cache p.json
+
+``--hw`` defaults to the ``REPRO_HW`` env var (else tpu_v5e); ``--plan-cache
+''`` disables persistence (in-memory cache only).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.context import BACKENDS, GemmContext
+from repro.core.hwregistry import default_hw, list_hw
+from repro.core.plancache import PlanCache, default_cache_path
+
+
+def add_context_args(
+    ap: argparse.ArgumentParser,
+    *,
+    backend_default: str = "xla",
+    include_quant: bool = True,
+) -> argparse.ArgumentParser:
+    g = ap.add_argument_group("execution context")
+    g.add_argument(
+        "--hw", default=None, metavar="GEN",
+        help=f"hardware generation for the GEMM planner/perf model "
+             f"({', '.join(list_hw())}; default: $REPRO_HW or tpu_v5e)")
+    g.add_argument(
+        "--matmul-backend", default=backend_default, choices=list(BACKENDS),
+        help="kernel backend for every dense()/balanced_gemm")
+    if include_quant:
+        g.add_argument(
+            "--quantize", default="none", choices=["none", "int8"],
+            help="int8: route every projection through the W8A8 "
+                 "balanced-GEMM path (fused requantize epilogue)")
+    g.add_argument(
+        "--plan-cache", default=None, metavar="PATH",
+        help="persistent GEMM plan cache JSON (default: "
+             "$REPRO_PLAN_CACHE or ~/.cache/repro/plancache.json; "
+             "'' = in-memory only)")
+    return ap
+
+
+def context_from_args(args: argparse.Namespace) -> GemmContext:
+    """Build (and load) the execution context an argparse namespace asks for."""
+    path = args.plan_cache
+    if path is None:
+        path = default_cache_path()
+    cache = PlanCache(path=path or None)
+    cache.load()
+    return GemmContext(
+        hw=args.hw if args.hw is not None else default_hw(),
+        matmul_backend=args.matmul_backend,
+        quant_mode=getattr(args, "quantize", None),
+        plan_cache=cache,
+    )

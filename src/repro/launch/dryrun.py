@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from repro import configs as C
 from repro import models
 from repro.configs.base import SHAPES, shape_applicable
+from repro.core.context import use_context
+from repro.launch.args import add_context_args, context_from_args
 from repro.launch.mesh import make_production_mesh
 from repro.parallel import sharding as shd
 from repro.roofline import hlo as hlo_lib
@@ -187,6 +189,7 @@ def main():
                     choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    add_context_args(ap, include_quant=False)
     args = ap.parse_args()
 
     archs = C.list_archs() if (args.all or args.arch is None) else [args.arch]
@@ -194,11 +197,12 @@ def main():
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[
         args.mesh]
     failures = 0
-    for arch in archs:
-        for shape_name in shapes:
-            for multi in meshes:
-                rec = run_cell(arch, shape_name, multi, args.out)
-                failures += rec["status"] == "error"
+    with use_context(context_from_args(args)):
+        for arch in archs:
+            for shape_name in shapes:
+                for multi in meshes:
+                    rec = run_cell(arch, shape_name, multi, args.out)
+                    failures += rec["status"] == "error"
     raise SystemExit(1 if failures else 0)
 
 

@@ -4,8 +4,21 @@ Requests arrive with different prompt lengths; the server right-pads to the
 batch maximum, prefills once, then decodes step-by-step with the sharded KV
 cache. Greedy sampling (deterministic; good for tests/examples).
 
+Start-up follows the production recipe the GemmContext subsystem enables:
+
+1. build the execution context from the shared --hw/--matmul-backend/
+   --quantize arg layer, loading previously solved plans from the
+   persistent cache;
+2. with --quantize int8, quantize the parameter tree *once at load*
+   (quant.prequant) so decode streams int8 weights — not the in-graph
+   re-quantization demo path;
+3. warm up: ``plan_model`` pre-solves every GEMM signature the model will
+   issue (prefill + decode, all projections) and persists them, so steady-
+   state traffic performs zero lazy plan solves and the *next* process
+   start solves nothing at all.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
-      --batch 4 --prompt-len 12 --gen 16
+      --hw tpu_v6e --quantize int8 --batch 4 --prompt-len 12 --gen 16
 """
 from __future__ import annotations
 
@@ -18,17 +31,23 @@ import numpy as np
 
 from repro import configs as C
 from repro import models
-from repro.data.synthetic import batch_for
+from repro.core.context import use_context
+from repro.core.gemm import plan_model
+from repro.launch.args import add_context_args, context_from_args
 from repro.launch.mesh import make_local_mesh, make_production_mesh
-from repro.layers import common as cm
+from repro.quant import prequant
 from repro.train.servestep import make_serve_step
 
 
 def serve_batch(cfg, mesh, params, prompts, *, gen_len: int, max_len: int,
-                extras=None):
+                extras=None, param_axes=None):
     """prompts: (B, P) int32. Returns (B, gen_len) generated ids."""
     B = prompts.shape[0]
-    art = make_serve_step(cfg, mesh, batch=B, max_len=max_len)
+    art = make_serve_step(
+        cfg, mesh, batch=B, max_len=max_len,
+        param_shapes=(None if param_axes is None
+                      else jax.eval_shape(lambda: params)),
+        param_axes=param_axes)
     with mesh:
         state = jax.jit(
             lambda: models.init_decode_state(cfg, B, max_len),
@@ -52,44 +71,74 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--production-mesh", action="store_true")
-    ap.add_argument("--matmul-backend", default="xla")
-    ap.add_argument("--quantize", default="none", choices=["none", "int8"],
-                    help="int8: route every projection through the W8A8 "
-                         "balanced-GEMM path (fused requantize epilogue)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the plan_model pre-solve (plans solve lazily)")
+    add_context_args(ap)
     args = ap.parse_args()
 
-    cm.set_matmul_backend(args.matmul_backend)
-    cm.set_quant_mode(args.quantize)
-    cfg = C.get_config(args.arch)
-    if args.smoke:
-        cfg = C.smoke(cfg)
-    mesh = (make_production_mesh() if args.production_mesh
-            else make_local_mesh())
+    ctx = context_from_args(args)
+    with use_context(ctx):
+        cfg = C.get_config(args.arch)
+        if args.smoke:
+            cfg = C.smoke(cfg)
+        mesh = (make_production_mesh() if args.production_mesh
+                else make_local_mesh())
 
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
-        jnp.int32)
-    extras = {}
-    if cfg.family == "encdec":
-        extras["frames"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.encoder_len, cfg.d_model)), jnp.float32)
-    if cfg.family == "vlm":
-        extras["image_embeds"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.n_image_tokens, cfg.d_model)), jnp.float32)
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
+            jnp.int32)
+        extras = {}
+        if cfg.family == "encdec":
+            extras["frames"] = jnp.asarray(rng.standard_normal(
+                (args.batch, cfg.encoder_len, cfg.d_model)), jnp.float32)
+        if cfg.family == "vlm":
+            extras["image_embeds"] = jnp.asarray(rng.standard_normal(
+                (args.batch, cfg.n_image_tokens, cfg.d_model)), jnp.float32)
 
-    params = models.init(jax.random.PRNGKey(0), cfg)
-    t0 = time.perf_counter()
-    out = serve_batch(cfg, mesh, params, prompts,
-                      gen_len=args.gen,
-                      max_len=args.prompt_len + args.gen + 1,
-                      extras=extras)
-    dt = time.perf_counter() - t0
-    toks = args.batch * args.gen
-    qtag = f" quant={args.quantize}" if args.quantize != "none" else ""
-    print(f"[serve] arch={cfg.name}{qtag} generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. compile)")
-    print("first row:", np.asarray(out[0])[:12], "...")
+        params = models.init(jax.random.PRNGKey(0), cfg)
+        param_axes = None
+        if ctx.quant_mode == "int8":
+            # quantize once at load: decode streams int8 weights, the
+            # dequantize rides the GEMM epilogue (§5.1 traffic win)
+            params = prequant.quantize_params(params)
+            param_axes = prequant.quantize_axes(models.axes(cfg))
+
+        max_len = args.prompt_len + args.gen + 1
+        if not args.no_warmup:
+            t0 = time.perf_counter()
+            warm = plan_model(
+                cfg, batch=args.batch, prompt_len=args.prompt_len,
+                max_len=max_len, params=params, extras=extras)
+            saved = ctx.plan_cache.save()
+            print(f"[plan-cache] warm-up {time.perf_counter()-t0:.2f}s: "
+                  f"{warm['signatures']} signatures, {warm['solved']} solved, "
+                  f"{warm['from_cache']} from cache "
+                  f"(hw={ctx.hw.name}"
+                  + (f", persisted to {saved}" if saved else "") + ")")
+        warm_stats = ctx.plan_cache.stats.snapshot()
+
+        t0 = time.perf_counter()
+        out = serve_batch(cfg, mesh, params, prompts,
+                          gen_len=args.gen, max_len=max_len,
+                          extras=extras, param_axes=param_axes)
+        dt = time.perf_counter() - t0
+        toks = args.batch * args.gen
+        qtag = f" quant={ctx.quant_mode}" if ctx.quant_mode else ""
+        print(f"[serve] arch={cfg.name}{qtag} hw={ctx.hw.name} "
+              f"backend={ctx.matmul_backend} generated {toks} tokens in "
+              f"{dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
+        print("first row:", np.asarray(out[0])[:12], "...")
+
+        st = ctx.plan_cache.stats
+        lazy = st.lazy_solves - warm_stats.lazy_solves
+        missed = st.misses - warm_stats.misses
+        print(f"[plan-cache] serving: hits={st.hits - warm_stats.hits} "
+              f"misses={missed} lazy_solves={lazy} ({st})")
+        if not args.no_warmup and (lazy or missed):
+            raise SystemExit(
+                f"plan warm-up incomplete: {missed} unseen signatures, "
+                f"{lazy} lazy solves during serving")
 
 
 if __name__ == "__main__":

@@ -23,12 +23,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as C
+from repro.core.context import use_context
 from repro.data.synthetic import batch_for
 from repro.ft import checkpoint as ckpt_lib
 from repro.ft.elastic import resume_on_mesh
 from repro.ft.straggler import StragglerMonitor
+from repro.launch.args import add_context_args, context_from_args
 from repro.launch.mesh import make_local_mesh, make_production_mesh
-from repro.layers import common as cm
 
 
 def main():
@@ -42,12 +43,15 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--production-mesh", action="store_true")
-    ap.add_argument("--matmul-backend", default="xla",
-                    choices=["xla", "pallas", "interpret", "auto"])
     ap.add_argument("--log-every", type=int, default=5)
+    add_context_args(ap, include_quant=False)
     args = ap.parse_args()
 
-    cm.set_matmul_backend(args.matmul_backend)
+    with use_context(context_from_args(args)):
+        return _run(args)
+
+
+def _run(args):
     cfg = C.get_config(args.arch)
     if args.smoke:
         cfg = C.smoke(cfg)

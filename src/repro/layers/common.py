@@ -5,6 +5,11 @@ Every matmul in every architecture routes through :func:`dense`, which calls
 GEMM substrate. ``backend='xla'`` (default off-TPU) lowers to a plain
 ``dot_general`` so dry-runs and CPU training use XLA; on TPU the balanced
 Pallas kernel is selected per-shape by the plan cache.
+
+Execution state (kernel backend, quantization mode, activation mesh) lives
+in the active :class:`repro.core.context.GemmContext`; the ``set_*``/
+``get_*`` functions here are thin shims over it, kept for the established
+call sites — their effect is scoped by any enclosing ``use_context`` block.
 """
 from __future__ import annotations
 
@@ -14,38 +19,35 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.context import current_context
 from repro.core.gemm import balanced_gemm
-
-# Global kernel backend for model layers ('auto' | 'xla' | 'pallas' |
-# 'interpret'). Dry-run and CPU tests use 'xla'; TPU launches flip to
-# 'pallas' via set_matmul_backend in the launcher.
-_MATMUL_BACKEND = "xla"
+from repro.quant.int8 import QuantizedLinear
 
 
 def set_matmul_backend(backend: str) -> None:
-    global _MATMUL_BACKEND
-    _MATMUL_BACKEND = backend
+    """'auto' | 'xla' | 'pallas' | 'interpret' for every dense() call."""
+    from repro.core.context import BACKENDS
+
+    if backend not in BACKENDS:
+        raise ValueError(f"matmul backend must be one of {BACKENDS}, "
+                         f"got {backend!r}")
+    current_context().matmul_backend = backend
 
 
 def get_matmul_backend() -> str:
-    return _MATMUL_BACKEND
-
-
-# Framework-wide quantization mode: None (full precision) or 'int8' (dynamic
-# W8A8 — every dense() routes through the int8 balanced-GEMM path with the
-# fused requantize epilogue). Set by the serve launcher (--quantize int8).
-_QUANT_MODE: str | None = None
+    return current_context().matmul_backend
 
 
 def set_quant_mode(mode: str | None) -> None:
+    """None (full precision) or 'int8': every dense() routes through the
+    W8A8 balanced-GEMM path with the fused requantize epilogue."""
     if mode not in (None, "none", "int8"):
         raise ValueError(f"quant mode must be None|'none'|'int8', got {mode!r}")
-    global _QUANT_MODE
-    _QUANT_MODE = None if mode == "none" else mode
+    current_context().quant_mode = None if mode == "none" else mode
 
 
 def get_quant_mode() -> str | None:
-    return _QUANT_MODE
+    return current_context().quant_mode
 
 
 def dense(
@@ -56,18 +58,36 @@ def dense(
     activation: str | None = None,
     out_dtype=None,
 ) -> jax.Array:
-    """x @ w (+bias, +activation) through the balanced-GEMM substrate."""
+    """x @ w (+bias, +activation) through the balanced-GEMM substrate.
+
+    ``w`` may be a float (K, N) weight or a pre-quantized
+    :class:`QuantizedLinear` (int8 (N, K) + per-channel scales), in which
+    case only int8 weights stream from HBM and the dequantize rides the
+    kernel epilogue. Float weights under ``quant_mode='int8'`` take the
+    dynamic W8A8 path (numerics demo: weights re-quantized in-graph).
+    """
+    ctx = current_context()
     out_dtype = out_dtype or x.dtype
-    if _QUANT_MODE == "int8" and not jnp.issubdtype(x.dtype, jnp.integer):
+    if isinstance(w, QuantizedLinear):
+        from repro.layers import quantized as qz
+
+        ql = w
+        if bias is not None:
+            ql = ql._replace(bias=bias.astype(jnp.float32))
+        return qz.qdense(
+            x, ql, activation=activation, out_dtype=out_dtype,
+            backend=ctx.matmul_backend,
+        )
+    if ctx.quant_mode == "int8" and not jnp.issubdtype(x.dtype, jnp.integer):
         from repro.layers import quantized as qz
 
         return qz.dynamic_qdense(
             x, w, bias, activation=activation, out_dtype=out_dtype,
-            backend=_MATMUL_BACKEND,
+            backend=ctx.matmul_backend,
         )
     return balanced_gemm(
         x, w, bias, out_dtype=out_dtype, activation=activation,
-        backend=_MATMUL_BACKEND,
+        backend=ctx.matmul_backend,
     )
 
 
@@ -117,29 +137,31 @@ def embed_lookup(table: jax.Array, ids: jax.Array, mesh=None) -> jax.Array:
 
 
 # --------------------------------------------------- activation sharding
-# The mesh is recorded at trace time by the model entry points so layers can
-# place with_sharding_constraint hints without threading it through every
-# signature. Hints are advisory: a dim that does not divide its mesh axis
-# degrades to None.
-_ACT_MESH = None
-
-
+# The mesh is recorded at trace time by the model entry points (into the
+# active GemmContext) so layers can place with_sharding_constraint hints
+# without threading it through every signature. Hints are advisory: a dim
+# that does not divide its mesh axis degrades to None.
 def set_activation_mesh(mesh) -> None:
-    global _ACT_MESH
-    _ACT_MESH = mesh
+    current_context().mesh = mesh
+
+
+def get_activation_mesh():
+    return current_context().mesh
 
 
 def axis_size(name: str) -> int:
-    if _ACT_MESH is None or name not in getattr(_ACT_MESH, "axis_names", ()):
+    mesh = current_context().mesh
+    if mesh is None or name not in getattr(mesh, "axis_names", ()):
         return 1
-    return dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape))[name]
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
 
 
 def dp_axes_present() -> tuple[str, ...]:
-    if _ACT_MESH is None:
+    mesh = current_context().mesh
+    if mesh is None:
         return ()
     return tuple(a for a in ("pod", "data")
-                 if a in getattr(_ACT_MESH, "axis_names", ()))
+                 if a in getattr(mesh, "axis_names", ()))
 
 
 def hint(x: jax.Array, *entries) -> jax.Array:
@@ -150,7 +172,7 @@ def hint(x: jax.Array, *entries) -> jax.Array:
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = _ACT_MESH
+    mesh = current_context().mesh
     if mesh is None:
         return x
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))

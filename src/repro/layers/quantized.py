@@ -30,27 +30,9 @@ from repro.layers.attention import AttnParams
 from repro.layers.mlp import MlpParams
 from repro.quant import int8 as qz
 
-
-class QuantizedLinear(NamedTuple):
-    """An int8 linear: y = x @ dequant(w_q) + bias.
-
-    w_q:     int8 (N, K)  — col-major (B^T) for contiguous int8 weight reads
-    w_scale: f32  (N,)    — per-output-channel symmetric scales
-    bias:    f32  (N,) | None — in real (dequantized) units
-    """
-
-    w_q: jax.Array
-    w_scale: jax.Array
-    bias: jax.Array | None
-
-
-def quantize_linear(w: jax.Array, bias: jax.Array | None = None) -> QuantizedLinear:
-    """PTQ of a (K, N) float weight to per-channel int8 in (N, K) layout."""
-    qt = qz.quantize_per_channel(w, axis=1)  # scales over N
-    return QuantizedLinear(
-        w_q=qt.q.T, w_scale=qt.scale,
-        bias=None if bias is None else bias.astype(jnp.float32),
-    )
+# Canonical home is repro.quant.int8 (so common.dense can dispatch on it
+# without an import cycle); re-exported here for the established API.
+from repro.quant.int8 import QuantizedLinear, quantize_linear  # noqa: F401
 
 
 def qdense(

@@ -15,10 +15,12 @@ from repro.quant.int8 import (
     QMAX,
     Calibrator,
     QTensor,
+    QuantizedLinear,
     absmax_scale,
     combine_scales,
     dequantize,
     quantize,
+    quantize_linear,
     quantize_per_channel,
     quantize_per_tensor,
 )
@@ -27,10 +29,12 @@ __all__ = [
     "QMAX",
     "Calibrator",
     "QTensor",
+    "QuantizedLinear",
     "absmax_scale",
     "combine_scales",
     "dequantize",
     "quantize",
+    "quantize_linear",
     "quantize_per_channel",
     "quantize_per_tensor",
 ]

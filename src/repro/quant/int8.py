@@ -118,3 +118,29 @@ def combine_scales(*scales: jax.Array) -> jax.Array:
     for s in scales[1:]:
         out = out * s
     return out
+
+
+class QuantizedLinear(NamedTuple):
+    """An int8 linear: y = x @ dequant(w_q) + bias.
+
+    w_q:     int8 (N, K)  — col-major (B^T) for contiguous int8 weight reads
+    w_scale: f32  (N,)    — per-output-channel symmetric scales
+    bias:    f32  (N,) | None — in real (dequantized) units
+
+    Lives here (not in layers/) so that ``layers.common.dense`` can detect
+    pre-quantized weight leaves without a layers→layers import cycle; in a
+    stacked parameter tree the leaves carry a leading layer dim.
+    """
+
+    w_q: jax.Array
+    w_scale: jax.Array
+    bias: jax.Array | None
+
+
+def quantize_linear(w: jax.Array, bias: jax.Array | None = None) -> QuantizedLinear:
+    """PTQ of a (K, N) float weight to per-channel int8 in (N, K) layout."""
+    qt = quantize_per_channel(w, axis=1)  # scales over N
+    return QuantizedLinear(
+        w_q=qt.q.T, w_scale=qt.scale,
+        bias=None if bias is None else bias.astype(jnp.float32),
+    )

@@ -1,0 +1,86 @@
+"""Pre-quantized parameter trees: quantize weights once at load time.
+
+The dynamic W8A8 mode (``quant_mode='int8'`` with float params) demonstrates
+the numerics but not the memory win — it re-quantizes float weights inside
+the traced graph every step, so decode still streams the full-precision
+weight bytes. This module walks a model parameter tree once at load and
+replaces every attention/MLP projection weight with a
+:class:`repro.quant.int8.QuantizedLinear` (int8 (N, K) weights + per-channel
+scales), so the serving graph streams int8 weights and the dequantize rides
+the GEMM epilogue (the §5.1 traffic win). ``layers.common.dense`` dispatches
+on the leaf type, so no model code changes.
+
+Stacked (scanned) layer trees are handled by vmapping the per-layer
+quantizer over the leading layer dim; the matching logical-axes transform
+keeps the partitioner working on the quantized tree (the (K, N)→(N, K)
+transpose swaps the leaf's logical axes).
+
+Families whose projections live in other containers (RWKV time-mix, Mamba,
+MoE expert tables) keep float weights — under ``quant_mode='int8'`` those
+fall back to the dynamic path, so a model is never half-broken.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.layers.attention import AttnParams
+from repro.layers.mlp import MlpParams
+from repro.quant.int8 import QuantizedLinear, quantize_linear
+
+
+def _quantize_weight(w: jax.Array) -> QuantizedLinear:
+    """(…, K, N) float weight -> (…, N, K) int8 + (…, N) scales."""
+    fn = quantize_linear
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w)
+
+
+def _axes_for_weight(axes: tuple) -> QuantizedLinear:
+    """Logical axes (*stack, K-axis, N-axis) -> the quantized leaf's axes."""
+    *stack, ak, an = axes
+    return QuantizedLinear(
+        w_q=(*stack, an, ak), w_scale=(*stack, an), bias=None)
+
+
+# Which fields of which containers are GEMM projection weights. Extending
+# pre-quantization to a new container (ROADMAP: MoE experts, RWKV) means
+# adding one entry here — params and axes transforms stay in lockstep.
+_PROJECTION_FIELDS: dict[type, tuple[str, ...]] = {
+    AttnParams: ("wq", "wk", "wv", "wo"),
+    MlpParams: ("w_in", "w_gate", "w_out"),
+}
+
+
+def _map_projections(tree: Any, leaf_fn) -> Any:
+    """Apply ``leaf_fn`` to every projection-weight field, leaving biases
+    and every other leaf untouched."""
+    def rec(node):
+        fields = _PROJECTION_FIELDS.get(type(node))
+        if fields is not None:
+            return node._replace(**{
+                f: leaf_fn(getattr(node, f))
+                for f in fields if getattr(node, f) is not None
+            })
+        if isinstance(node, dict):
+            return {k: rec(v) for k, v in node.items()}
+        return node
+
+    return rec(tree)
+
+
+def quantize_params(params: Any) -> Any:
+    """Replace attention/MLP projection weights with QuantizedLinear leaves.
+
+    Biases stay where they are (separate NamedTuple fields, passed through
+    ``dense`` unchanged); every other leaf is untouched.
+    """
+    return _map_projections(params, _quantize_weight)
+
+
+def quantize_axes(axes: Any) -> Any:
+    """Transform a logical-axes tree in lockstep with :func:`quantize_params`
+    so ``parallel.sharding.param_shardings`` keeps working."""
+    return _map_projections(axes, _axes_for_weight)

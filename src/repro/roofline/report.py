@@ -1,9 +1,11 @@
 """Roofline report generator: dry-run JSONs -> EXPERIMENTS.md tables.
 
-Per (arch × shape × mesh) cell:
-  compute term    = flops_per_device / peak_FLOP/s          (197 TF bf16)
-  memory term     = bytes_per_device / HBM_bw               (819 GB/s)
-  collective term = collective_bytes_per_device / link_bw   (~50 GB/s)
+Per (arch × shape × mesh) cell, against the active hardware generation
+(``--hw``, default from the execution context — e.g. tpu_v5e: 197 TF bf16,
+819 GB/s HBM, ~50 GB/s link):
+  compute term    = flops_per_device / peak_FLOP/s
+  memory term     = bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
 
 The HLO analyzer reports *per-device* quantities (the compiled module is the
 SPMD per-device program), so chips=1 in the roofline formulas; the chips
@@ -24,7 +26,8 @@ import jax.numpy as jnp
 from repro import configs as C
 from repro import models
 from repro.configs.base import SHAPES
-from repro.core.perfmodel import TPU_V5E, roofline_terms
+from repro.core.context import resolve_hw, use_context
+from repro.core.perfmodel import roofline_terms
 
 
 def _param_counts(cfg) -> tuple[int, int]:
@@ -68,16 +71,18 @@ def load_records(dryrun_dir: str) -> list[dict]:
     return recs
 
 
-def enrich(rec: dict) -> dict:
-    """Attach roofline terms + model-flops ratio to one dry-run record."""
+def enrich(rec: dict, hw=None) -> dict:
+    """Attach roofline terms + model-flops ratio to one dry-run record,
+    against the given (or context-active) hardware generation."""
     if rec["status"] != "ok":
         return rec
+    hw = resolve_hw(hw)
     cfg = C.get_config(rec["arch"])
     shape = SHAPES[rec["shape"]]
     hlo = rec["hlo"]
     dtype = jnp.bfloat16
     rt = roofline_terms(
-        TPU_V5E,
+        hw,
         hlo_flops=hlo["flops_per_device"],
         hlo_bytes=hlo["bytes_per_device"],
         collective_bytes=hlo["collective_bytes_per_device"],
@@ -87,6 +92,7 @@ def enrich(rec: dict) -> dict:
     mf = model_flops(cfg, shape)
     hlo_flops_global = hlo["flops_per_device"] * rec["chips"]
     rec["roofline"] = {
+        "hw": hw.name,
         "compute_s": rt.compute,
         "memory_s": rt.memory,
         "collective_s": rt.collective,
@@ -98,10 +104,10 @@ def enrich(rec: dict) -> dict:
         # fraction of the ideal (all-overlap) step bound spent on compute:
         # the "roofline fraction" perf score for this cell
         "roofline_fraction": (rt.compute / rt.bound if rt.bound else 0.0),
-        "model_time_s": mf / (rec["chips"] * TPU_V5E.peak_flops(dtype)),
+        "model_time_s": mf / (rec["chips"] * hw.peak_flops(dtype)),
         # MFU if the step ran exactly at the overlap bound
         "mfu_at_bound": (
-            mf / (rec["chips"] * TPU_V5E.peak_flops(dtype)) / rt.bound
+            mf / (rec["chips"] * hw.peak_flops(dtype)) / rt.bound
             if rt.bound else 0.0),
     }
     return rec
@@ -133,8 +139,9 @@ def suggestion(rec: dict) -> str:
             "reduce-scatter + fused epilogue")
 
 
-def markdown_tables(recs: list[dict]) -> str:
-    recs = [enrich(dict(r)) for r in recs]
+def markdown_tables(recs: list[dict], hw=None) -> str:
+    hw = resolve_hw(hw)
+    recs = [enrich(dict(r), hw=hw) for r in recs]
     ok = [r for r in recs if r["status"] == "ok"]
     skipped = [r for r in recs if r["status"] == "skipped"]
 
@@ -164,7 +171,8 @@ def markdown_tables(recs: list[dict]) -> str:
     out.append("")
 
     # ---- roofline table (single-pod only, per assignment)
-    out.append("### Roofline terms (single-pod 16×16, per device)\n")
+    out.append(f"### Roofline terms (single-pod 16×16, per device, "
+               f"{hw.name})\n")
     out.append("| arch | shape | compute ms | memory ms | collective ms | "
                "dominant | 6ND/HLO | roofline frac | MFU@bound | "
                "what would move the dominant term |")
@@ -189,8 +197,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--hw", default=None,
+                    help="hardware generation for the roofline constants")
     args = ap.parse_args()
-    md = markdown_tables(load_records(args.dryrun_dir))
+    with use_context(hw=resolve_hw(args.hw)):
+        md = markdown_tables(load_records(args.dryrun_dir))
     if args.out:
         with open(args.out, "w") as f:
             f.write(md)

@@ -30,11 +30,15 @@ class ServeArtifacts:
 
 def make_serve_step(
     cfg: ModelConfig, mesh: Mesh, *, batch: int, max_len: int,
-    with_prefill: bool = True,
+    with_prefill: bool = True, param_shapes=None, param_axes=None,
 ) -> ServeArtifacts:
-    axes = models.axes(cfg)
-    param_shapes = jax.eval_shape(
-        lambda: models.init(jax.random.PRNGKey(0), cfg))
+    """``param_shapes``/``param_axes`` override the config-derived parameter
+    tree — the pre-quantized serving path passes the QuantizedLinear tree
+    and its transformed logical axes (quant.prequant)."""
+    axes = param_axes if param_axes is not None else models.axes(cfg)
+    if param_shapes is None:
+        param_shapes = jax.eval_shape(
+            lambda: models.init(jax.random.PRNGKey(0), cfg))
     pshard = shd.param_shardings(axes, param_shapes, mesh)
     state_shapes = jax.eval_shape(
         lambda: models.init_decode_state(cfg, batch, max_len))

@@ -114,6 +114,39 @@ def test_balance_iteration_terminates_at_knee():
     assert run <= 3
 
 
+def test_balance_result_reports_actual_balance():
+    """`balanced` means the chosen point's t_comp and t_mem are within the
+    tolerance — not merely that the walk recorded steps."""
+    def result_for(t_comp, t_mem):
+        plan = GemmPlan(256, 512, 256)
+        step = balance.BalanceStep(
+            plan=plan, t_comp=t_comp, t_mem=t_mem,
+            t_total=max(t_comp, t_mem), tops=1.0)
+        return balance.BalanceResult(plan=plan, steps=[step], tops=1.0)
+
+    assert result_for(1.0, 0.9).balanced
+    assert result_for(0.9, 1.0).balanced
+    assert not result_for(1.0, 0.4).balanced          # memory-starved
+    assert not result_for(0.4, 1.0).balanced          # memory-bound
+    assert result_for(1.0, 0.4).is_balanced(tol=0.8)  # tolerance is a knob
+    # a result whose plan matches no recorded step cannot claim balance
+    orphan = balance.BalanceResult(
+        plan=GemmPlan(128, 128, 128),
+        steps=result_for(1.0, 1.0).steps, tops=1.0)
+    assert orphan.chosen_step is None and not orphan.balanced
+
+
+def test_balanced_property_consistent_with_chosen_step():
+    """On real solver output the property must agree with the recorded
+    times of the step the returned plan came from."""
+    for M, K, N in [(4096, 4096, 4096), (64, 8192, 28672)]:
+        res = balance.solve_exhaustive(M, K, N, in_dtype=jnp.bfloat16)
+        s = res.chosen_step
+        assert s is not None and s.plan == res.plan
+        hi, lo = max(s.t_comp, s.t_mem), min(s.t_comp, s.t_mem)
+        assert res.balanced == ((hi - lo) / hi <= 0.25)
+
+
 def test_roofline_terms():
     rt = pm.roofline_terms(
         pm.TPU_V5E, hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e11,
