@@ -61,7 +61,8 @@ def main() -> None:
 
     from benchmarks import (crossgen, fig6_kmt, fig78_sweep, int8_sweep,
                             roofline_cells, sec532_buffering, sec533_overlap,
-                            table1_kernel, table23_balanced, wallclock)
+                            serve_engine, table1_kernel, table23_balanced,
+                            wallclock)
     modules = {
         "table1": [table1_kernel.run],
         "table23": [table23_balanced.run, table23_balanced.run_skinny],
@@ -73,6 +74,7 @@ def main() -> None:
         "sec533": [sec533_overlap.run],
         "wallclock": [wallclock.run],
         "roofline": [roofline_cells.run],
+        "serve": [serve_engine.run],
     }
     only = set(args.only.split(",")) if args.only else set(modules)
     rows = []

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +87,70 @@ def wallclock_measure_fn(
         return best
 
     return fn
+
+
+def refine_cached_plans(
+    cache,
+    keys: Iterable[tuple] | None = None,
+    *,
+    measure_factory: Callable[..., Callable[[GemmPlan], float]] | None = None,
+    backend: str = "interpret",
+    repeats: int = 2,
+    rounds: int = 1,
+) -> dict[str, int]:
+    """Refine cached plans in place with measured feedback (ROADMAP item).
+
+    For each plan-cache key (default: the signatures the most recent warm-up
+    consulted, ``cache.warm_keys``), measure the cached model-solved plan
+    against its ±1-step tile neighborhood and keep the measured-best —
+    on-hardware starts thereby turn the analytical plans into wall-clock
+    plans without changing the cache schema (a plan is a plan; only its
+    provenance improves). The caller persists via ``cache.save()``.
+
+    ``measure_factory(M, K, N, in_dtype=…, out_dtype=…, b_layout=…)`` builds
+    the per-signature measurement; the default is
+    :func:`wallclock_measure_fn` on ``backend`` (the real kernel on TPU,
+    interpret mode elsewhere). Entries whose key is missing from the cache
+    are skipped — refinement never *adds* signatures.
+    """
+    if measure_factory is None:
+        def measure_factory(M, K, N, **kw):
+            return wallclock_measure_fn(
+                M, K, N, backend=backend, repeats=repeats, **kw)
+    keys = list(cache.warm_keys if keys is None else keys)
+    stats = {"measured": 0, "refined": 0, "kept": 0, "skipped": 0}
+    for key in keys:
+        plan = cache.entries.get(key)
+        if plan is None:
+            stats["skipped"] += 1
+            continue
+        _hw, M, K, N, in_dtype, out_dtype, b_layout = key
+        fn = measure_factory(
+            M, K, N, in_dtype=jnp.dtype(in_dtype),
+            out_dtype=jnp.dtype(out_dtype), b_layout=b_layout)
+        ty = jnp.dtype(in_dtype).itemsize
+        ty_out = jnp.dtype(out_dtype).itemsize
+        hw = resolve_hw(_hw)
+        best_plan, best_t = plan, fn(plan)
+        stats["measured"] += 1
+        for _ in range(max(1, rounds)):
+            improved = False
+            for cand in _neighbors(best_plan, ty):
+                if vmem_bytes(cand.bm, cand.bk, cand.bn, ty, ty_out) \
+                        > hw.vmem_bytes:
+                    continue
+                t = fn(cand)
+                stats["measured"] += 1
+                if t < best_t:
+                    best_plan, best_t, improved = cand, t, True
+            if not improved:
+                break
+        if best_plan is not plan:
+            cache.entries[key] = best_plan
+            stats["refined"] += 1
+        else:
+            stats["kept"] += 1
+    return stats
 
 
 def _neighbors(plan: GemmPlan, itemsize: int) -> list[GemmPlan]:

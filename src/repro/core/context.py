@@ -83,6 +83,14 @@ def resolve_hw(hw: str | HardwareSpec | None) -> HardwareSpec:
     return hwregistry.get_hw(hw)
 
 
+def expect_steady_state(what: str = "steady-state region"):
+    """Assert zero lazy plan solves / zero misses on the *active* context's
+    plan cache for the dynamic extent of the block (see
+    :meth:`repro.core.plancache.PlanCache.expect_steady_state`). The serving
+    engine wraps every post-warm-up decode tick in this."""
+    return current_context().plan_cache.expect_steady_state(what)
+
+
 @contextlib.contextmanager
 def use_context(
     ctx: GemmContext | None = None,

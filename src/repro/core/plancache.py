@@ -50,6 +50,12 @@ def _key_from_str(s: str) -> PlanKey | None:
         return None
 
 
+class PlanCacheColdError(RuntimeError):
+    """Raised by :meth:`PlanCache.expect_steady_state` when a region that
+    declared itself warm performed lazy solver work or consulted a
+    signature the warm-up never saw."""
+
+
 @dataclasses.dataclass
 class PlanCacheStats:
     hits: int = 0
@@ -125,6 +131,25 @@ class PlanCache:
     @property
     def warming(self) -> bool:
         return self._warming > 0
+
+    @contextlib.contextmanager
+    def expect_steady_state(self, what: str = "steady-state region"):
+        """Assert the block performs zero lazy plan solves and zero misses.
+
+        The serving engine wraps its decode loop in this: slot count,
+        max_len and model dims are fixed at engine build, so every tick must
+        replay the exact signature set the warm-up traced — a lazy solve or
+        an unseen signature inside the block is a bug (warm-up drift), not a
+        performance footnote, and raises :class:`PlanCacheColdError`.
+        """
+        before = self.stats.snapshot()
+        yield before
+        lazy = self.stats.lazy_solves - before.lazy_solves
+        misses = self.stats.misses - before.misses
+        if lazy or misses:
+            raise PlanCacheColdError(
+                f"{what} was not plan-warm: {misses} unseen signatures, "
+                f"{lazy} lazy solves ({self.stats})")
 
     # ------------------------------------------------------------- disk
     def load(self, path: str | None = None) -> int:

@@ -46,6 +46,35 @@ def add_context_args(
     return ap
 
 
+def add_serve_engine_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """The serving-engine argument layer (continuous batching; docs/serving.md)."""
+    g = ap.add_argument_group("serving engine")
+    g.add_argument(
+        "--engine", action="store_true",
+        help="serve with the continuous-batching slot engine instead of "
+             "static batching (repro.serve)")
+    g.add_argument(
+        "--num-slots", type=int, default=4, metavar="N",
+        help="fixed decode lanes: every decode tick is one (N, 1) step "
+             "regardless of traffic (default 4)")
+    g.add_argument(
+        "--max-new-tokens", type=int, default=None, metavar="N",
+        help="per-request generation budget for the engine trace "
+             "(default: --gen)")
+    g.add_argument(
+        "--eos-id", type=int, default=None, metavar="ID",
+        help="stop id: requests/sequences end early on this token "
+             "(both engine and static paths)")
+    g.add_argument(
+        "--metrics-json", default=None, metavar="PATH",
+        help="write the engine's serve metrics JSON here")
+    g.add_argument(
+        "--measure-plans", action="store_true",
+        help="refine warm-up plans in place with wall-clock measurement "
+             "(core.autotune) and persist the refined plans")
+    return ap
+
+
 def context_from_args(args: argparse.Namespace) -> GemmContext:
     """Build (and load) the execution context an argparse namespace asks for."""
     path = args.plan_cache

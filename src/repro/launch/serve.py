@@ -19,6 +19,14 @@ Start-up follows the production recipe the GemmContext subsystem enables:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
       --hw tpu_v6e --quantize int8 --batch 4 --prompt-len 12 --gen 16
+
+``--engine`` swaps static batching for the continuous-batching slot engine
+(``repro.serve``): requests admit/retire mid-flight while the decode batch
+stays at ``--num-slots`` fixed lanes, so every tick replays one plan-cached
+GEMM signature set (docs/serving.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
+      --num-slots 4 --prompt-len 12 --gen 16 --metrics-json serve.json
 """
 from __future__ import annotations
 
@@ -33,15 +41,25 @@ from repro import configs as C
 from repro import models
 from repro.core.context import use_context
 from repro.core.gemm import plan_model
-from repro.launch.args import add_context_args, context_from_args
+from repro.launch.args import (add_context_args, add_serve_engine_args,
+                               context_from_args)
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.quant import prequant
 from repro.train.servestep import make_serve_step
 
 
 def serve_batch(cfg, mesh, params, prompts, *, gen_len: int, max_len: int,
-                extras=None, param_axes=None):
-    """prompts: (B, P) int32. Returns (B, gen_len) generated ids."""
+                extras=None, param_axes=None, eos_id: int | None = None,
+                pad_id: int = 0):
+    """prompts: (B, P) int32. Returns (B, gen_len) generated ids.
+
+    With ``eos_id``, generation stops *per sequence* at the first stop
+    token: the stop token is kept, the tail is ``pad_id``, and a finished
+    row keeps feeding ``pad_id`` (so its outputs are reproducible and
+    engine-comparable). The batch still decodes until every row finishes or
+    ``gen_len`` — that whole-batch tail is exactly the waste the
+    continuous-batching engine (repro.serve) exists to reclaim.
+    """
     B = prompts.shape[0]
     art = make_serve_step(
         cfg, mesh, batch=B, max_len=max_len,
@@ -55,12 +73,91 @@ def serve_batch(cfg, mesh, params, prompts, *, gen_len: int, max_len: int,
         batch_in = {"tokens": prompts, **(extras or {})}
         logits, state = art.prefill_fn(params, state, batch_in)
         out = []
+        finished = jnp.zeros((B,), bool)
         tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
         for _ in range(gen_len):
+            if eos_id is not None:
+                tok = jnp.where(finished, jnp.int32(pad_id), tok)
             out.append(tok)
+            if eos_id is not None:
+                finished = finished | (tok == eos_id)
+                if bool(finished.all()):
+                    break
             logits, state = art.decode_fn(params, state, tok[:, None])
             tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
-    return jnp.stack(out, axis=1)
+    gen = jnp.stack(out, axis=1)
+    if gen.shape[1] < gen_len:  # every row hit EOS early: pad the tail
+        gen = jnp.pad(gen, ((0, 0), (0, gen_len - gen.shape[1])),
+                      constant_values=pad_id)
+    return gen
+
+
+def _report_warmup(ctx, warm: dict, seconds: float, label: str) -> None:
+    """Persist the warmed plans and print one warm-up summary line."""
+    saved = ctx.plan_cache.save()
+    print(f"[plan-cache] {label} {seconds:.2f}s: "
+          f"{warm['signatures']} signatures, {warm['solved']} solved, "
+          f"{warm['from_cache']} from cache (hw={ctx.hw.name}"
+          + (f", persisted to {saved}" if saved else "") + ")")
+
+
+def _measure_plans(ctx, args) -> None:
+    """--measure-plans: refine the warm-up's plans with wall-clock feedback
+    (core.autotune) and persist the refined set (ROADMAP item)."""
+    from repro.core.autotune import refine_cached_plans
+
+    t0 = time.perf_counter()
+    stats = refine_cached_plans(ctx.plan_cache)
+    saved = ctx.plan_cache.save()
+    print(f"[plan-cache] measured refinement {time.perf_counter()-t0:.2f}s: "
+          f"{stats['measured']} measurements, {stats['refined']} plans "
+          f"refined, {stats['kept']} kept"
+          + (f", persisted to {saved}" if saved else ""))
+
+
+def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
+    """--engine: continuous batching over a mixed-length synthetic trace."""
+    from repro.serve import ServeEngine, synthetic_trace
+
+    gen = args.max_new_tokens or args.gen
+    plen = args.prompt_len
+    engine = ServeEngine(
+        cfg, mesh, params, num_slots=args.num_slots,
+        max_len=plen + gen + 1, prompt_pad=plen, param_axes=param_axes)
+    if not args.no_warmup:
+        t0 = time.perf_counter()
+        warm = engine.plan_warmup()
+        _report_warmup(ctx, warm, time.perf_counter() - t0, "engine warm-up")
+        if args.measure_plans:
+            _measure_plans(ctx, args)
+
+    trace = synthetic_trace(
+        max(args.batch, 2 * args.num_slots),
+        vocab_size=cfg.vocab_size,
+        prompt_lens=[plen, max(1, plen // 2), max(1, (3 * plen) // 4)],
+        max_new_tokens=[gen, max(1, gen // 2), max(1, gen // 4)],
+        stop_ids=(args.eos_id,) if args.eos_id is not None else (),
+        seed=0)
+    m = engine.run(trace)
+    qtag = f" quant={ctx.quant_mode}" if ctx.quant_mode else ""
+    print(f"[engine] arch={cfg.name}{qtag} hw={ctx.hw.name} "
+          f"backend={ctx.matmul_backend} slots={args.num_slots}: "
+          f"{len(trace)} requests, {m.generated_tokens} tokens in "
+          f"{m.wall_s:.2f}s ({m.tokens_per_sec:.1f} tok/s incl. compile), "
+          f"mean occupancy {m.mean_occupancy:.2f}/{args.num_slots}, "
+          f"{m.ticks} ticks")
+    pc = m.plan_cache
+    print(f"[plan-cache] serving: hits={pc['hits']} misses={pc['misses']} "
+          f"lazy_solves={pc['lazy_solves']} "
+          f"steady_state={pc['steady_state']}")
+    first = engine.finished[0]
+    print(f"first finished: id={first.request.request_id} "
+          f"reason={first.finish_reason} tokens={first.tokens[:12]} ...")
+    if args.metrics_json:
+        m.to_json(args.metrics_json)
+        print(f"[engine] metrics written to {args.metrics_json}")
+    # steady state needs no guard here: a warmed engine's run() itself
+    # raises PlanCacheColdError on any lazy solve or unseen signature
 
 
 def main():
@@ -72,8 +169,9 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--no-warmup", action="store_true",
-                    help="skip the plan_model pre-solve (plans solve lazily)")
+                    help="skip the plan pre-solve (plans solve lazily)")
     add_context_args(ap)
+    add_serve_engine_args(ap)
     args = ap.parse_args()
 
     ctx = context_from_args(args)
@@ -83,6 +181,18 @@ def main():
             cfg = C.smoke(cfg)
         mesh = (make_production_mesh() if args.production_mesh
                 else make_local_mesh())
+
+        params = models.init(jax.random.PRNGKey(0), cfg)
+        param_axes = None
+        if ctx.quant_mode == "int8":
+            # quantize once at load: decode streams int8 weights, the
+            # dequantize rides the GEMM epilogue (§5.1 traffic win)
+            params = prequant.quantize_params(params)
+            param_axes = prequant.quantize_axes(models.axes(cfg))
+
+        if args.engine:
+            _run_engine(args, ctx, cfg, mesh, params, param_axes)
+            return
 
         rng = np.random.default_rng(0)
         prompts = jnp.asarray(
@@ -96,32 +206,22 @@ def main():
             extras["image_embeds"] = jnp.asarray(rng.standard_normal(
                 (args.batch, cfg.n_image_tokens, cfg.d_model)), jnp.float32)
 
-        params = models.init(jax.random.PRNGKey(0), cfg)
-        param_axes = None
-        if ctx.quant_mode == "int8":
-            # quantize once at load: decode streams int8 weights, the
-            # dequantize rides the GEMM epilogue (§5.1 traffic win)
-            params = prequant.quantize_params(params)
-            param_axes = prequant.quantize_axes(models.axes(cfg))
-
         max_len = args.prompt_len + args.gen + 1
         if not args.no_warmup:
             t0 = time.perf_counter()
             warm = plan_model(
                 cfg, batch=args.batch, prompt_len=args.prompt_len,
                 max_len=max_len, params=params, extras=extras)
-            saved = ctx.plan_cache.save()
-            print(f"[plan-cache] warm-up {time.perf_counter()-t0:.2f}s: "
-                  f"{warm['signatures']} signatures, {warm['solved']} solved, "
-                  f"{warm['from_cache']} from cache "
-                  f"(hw={ctx.hw.name}"
-                  + (f", persisted to {saved}" if saved else "") + ")")
+            _report_warmup(ctx, warm, time.perf_counter() - t0, "warm-up")
+            if args.measure_plans:
+                _measure_plans(ctx, args)
         warm_stats = ctx.plan_cache.stats.snapshot()
 
         t0 = time.perf_counter()
         out = serve_batch(cfg, mesh, params, prompts,
                           gen_len=args.gen, max_len=max_len,
-                          extras=extras, param_axes=param_axes)
+                          extras=extras, param_axes=param_axes,
+                          eos_id=args.eos_id)
         dt = time.perf_counter() - t0
         toks = args.batch * args.gen
         qtag = f" quant={ctx.quant_mode}" if ctx.quant_mode else ""

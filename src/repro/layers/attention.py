@@ -224,7 +224,10 @@ def self_attention(
 class KVCache(NamedTuple):
     k: jax.Array      # (B, S_max, Hkv, Dh)
     v: jax.Array      # (B, S_max, Hkv, Dh)
-    length: jax.Array  # scalar int32: valid prefix length
+    # valid prefix length: scalar int32 (all rows share one position — the
+    # static-batch serve path) or (B,) int32 (per-slot positions — the
+    # continuous-batching engine, where every lane decodes at its own depth)
+    length: jax.Array
 
 
 def init_kv_cache(batch, max_len, n_kv_heads, head_dim, dtype=jnp.bfloat16):
@@ -275,6 +278,14 @@ def decode_attention(
     slots are masked by position. With the cache sequence dim sharded over
     the mesh 'data' axis (long_500k), GSPMD turns the masked softmax into
     the distributed flash-decode combine (partial max/sum + all-reduce).
+
+    ``cache.length`` may be a scalar (every row at the same depth — static
+    batching) or a (B,) vector of per-slot positions (the serving engine's
+    slot lanes). The returned cache advances every position by 1; in the
+    per-slot path the caller owns the advance instead (``lm.decode_step``
+    masks it by the active lanes and discards the per-layer length) — a
+    vacant lane's pad-token KV write lands beyond the valid prefix and is
+    overwritten by the next admission.
     """
     B, S1, _ = x.shape
     assert S1 == 1
@@ -283,16 +294,25 @@ def decode_attention(
     k = cm.dense(x, p.wk, p.bk).reshape(B, 1, n_kv, hd)
     v = cm.dense(x, p.wv, p.bv).reshape(B, 1, n_kv, hd)
     pos = cache.length
+    per_slot = pos.ndim == 1
     if use_rope:
-        sin, cos = cm.rotary_embedding(
-            pos[None, None].astype(jnp.float32), hd, rope_theta
-        )
+        # (B, 1) positions per slot; a scalar broadcasts to every row
+        rpos = (pos[:, None] if per_slot else pos[None, None]).astype(
+            jnp.float32)
+        sin, cos = cm.rotary_embedding(rpos, hd, rope_theta)
         q = cm.apply_rotary(q, sin, cos)
         k = cm.apply_rotary(k, sin, cos)
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k.astype(cache.k.dtype), pos, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v.astype(cache.v.dtype), pos, axis=1)
+    if per_slot:
+        rows = jnp.arange(B)
+        ck = cache.k.at[rows, pos].set(k[:, 0].astype(cache.k.dtype),
+                                       mode="drop")
+        cv = cache.v.at[rows, pos].set(v[:, 0].astype(cache.v.dtype),
+                                       mode="drop")
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), pos, axis=1)
     n_heads = q.shape[2]
     scale = hd ** -0.5
     kr = _repeat_kv(ck, n_heads // n_kv)
@@ -303,8 +323,10 @@ def decode_attention(
         "bqhd,bkhd->bhqk", (q * jnp.asarray(scale, q.dtype)).astype(kr.dtype),
         kr, preferred_element_type=jnp.float32,
     )
-    valid = jnp.arange(cache.k.shape[1]) <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    kpos = jnp.arange(cache.k.shape[1])
+    valid = (kpos[None, :] <= pos[:, None] if per_slot
+             else jnp.broadcast_to(kpos <= pos, (B, cache.k.shape[1])))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vr.dtype), vr,
                    preferred_element_type=jnp.float32)

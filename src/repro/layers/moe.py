@@ -26,6 +26,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.layers import common as cm
 from repro.kernels.ref import apply_activation
+from repro.quant.int8 import QuantizedLinear
 
 
 class MoeParams(NamedTuple):
@@ -62,6 +63,18 @@ def moe_axes(gated=True):
 
 def _round8(x: int) -> int:
     return max(8, -(-x // 8) * 8)
+
+
+def _maybe_dequant(w, dtype):
+    """Pre-quantized expert table (…, N, K) int8 + (…, N) scales -> float
+    (…, K, N) in the einsum's orientation. Runs *inside* the shard_map
+    local block, so only int8 bytes cross HBM/ICI; the float copy is a
+    transient on-chip value feeding the expert einsum. Float tables pass
+    through untouched."""
+    if isinstance(w, QuantizedLinear):
+        wf = w.w_q.astype(jnp.float32) * w.w_scale[..., :, None]
+        return jnp.swapaxes(wf, -1, -2).astype(dtype)
+    return w
 
 
 def _positions_in_bucket(bucket: jax.Array, n_buckets: int) -> jax.Array:
@@ -116,8 +129,25 @@ def moe_ffn(
     norm_topk: bool = True,
     activation: str = "silu",
     aux_coef: float = 0.01,
+    token_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (y, aux_loss). x: (B, S, d) with B sharded over dp_axes."""
+    """Returns (y, aux_loss). x: (B, S, d) with B sharded over dp_axes.
+
+    ``token_mask`` (B, S) marks live tokens; dead ones (a serving engine's
+    vacant pad lanes) are excluded from routing *and capacity* — they must
+    not occupy expert-bucket slots, or an active request's expert
+    assignment could be dropped depending on unrelated slot occupancy
+    (breaking the engine's served-alone determinism). Dead rows return 0.
+
+    ``mesh=None`` (abstract traces: ``plan_model``, shape-only tests) runs
+    the same code on a synthetic 1×1 mesh — all collectives are identities
+    there, so the traced signature set matches single-shard serving."""
+    if mesh is None:
+        import numpy as _np
+
+        from repro.compat import mesh_from_devices
+        mesh = mesh_from_devices(
+            _np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     E = p.w_router.shape[1]
     mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     D = mesh_axes.get(ep_axis, 1)          # number of expert shards
@@ -137,10 +167,14 @@ def moe_ffn(
     # d-sharded between blocks anyway).
     scatter_out = bool(tp and tp_size > 1 and d_model % tp_size == 0)
 
-    def local(x_l, w_router, w_in, w_gate, w_out):
+    def local(x_l, tm_l, w_router, w_in, w_gate, w_out):
+        w_in = _maybe_dequant(w_in, x_l.dtype)
+        w_gate = _maybe_dequant(w_gate, x_l.dtype)
+        w_out = _maybe_dequant(w_out, x_l.dtype)
         B_l, S, d = x_l.shape
         T = B_l * S
         xf = x_l.reshape(T, d)
+        tmf = tm_l.reshape(T)
         logits = cm.dense(xf.astype(jnp.float32), w_router)
         probs, gates, idx = _top_k_gates(logits, top_k, norm_topk)
 
@@ -156,10 +190,14 @@ def moe_ffn(
         a_tok = jnp.repeat(jnp.arange(T), top_k)          # (T*k,)
         a_exp = idx.reshape(-1)                           # global expert ids
         a_gate = gates.reshape(-1).astype(jnp.float32)
-        dest = a_exp // E_l                               # target shard
+        # dead tokens route to a phantom shard D: they take no bucket
+        # positions (capacity isolation) and every write to shard D falls
+        # out of bounds and is dropped
+        a_live = tmf[a_tok]
+        dest = jnp.where(a_live, a_exp // E_l, D)         # target shard
         Cs = _round8(int(capacity_factor * T * top_k / D))
-        pos = _positions_in_bucket(dest, D)
-        keep = pos < Cs
+        pos = _positions_in_bucket(dest, D + 1)
+        keep = a_live & (pos < Cs)
         pos_c = jnp.where(keep, pos, Cs - 1)
 
         send_x = jnp.zeros((D, Cs, d), x_l.dtype)
@@ -222,19 +260,34 @@ def moe_ffn(
         )
         return y.reshape(B_l, S, d_out).astype(x_l.dtype), aux
 
-    wspec = P(ep_axis, None, tp_axis) if tp_axis else P(ep_axis, None, None)
+    def wspec(w, k_ax, n_ax):
+        """Spec for one (E, K, N)-oriented expert table. A pre-quantized
+        table stores (E, N, K) int8 + (E, N) scales, so the logical K/N
+        mesh axes swap positions on w_q and the scales follow N."""
+        if isinstance(w, QuantizedLinear):
+            return QuantizedLinear(
+                w_q=P(ep_axis, n_ax, k_ax), w_scale=P(ep_axis, n_ax),
+                bias=None)
+        return P(ep_axis, k_ax, n_ax)
+
+    tp_ax = tp_axis if tp_axis else None
+    tm = (jnp.ones(x.shape[:2], bool) if token_mask is None
+          else jnp.broadcast_to(token_mask.astype(bool), x.shape[:2]))
     out = shard_map(
         local,
         mesh=mesh,
         in_specs=(
             P(dp_spec, None, None),
+            P(dp_spec, None),
             P(None, None),
-            wspec, wspec if p.w_gate is not None else P(None, None, None),
-            P(ep_axis, tp_axis, None) if tp_axis else P(ep_axis, None, None),
+            wspec(p.w_in, None, tp_ax),
+            (wspec(p.w_gate, None, tp_ax) if p.w_gate is not None
+             else P(None, None, None)),
+            wspec(p.w_out, tp_ax, None),
         ),
         out_specs=(P(dp_spec, None, tp_axis if scatter_out else None), P()),
         check_vma=False,
-    )(x, p.w_router, p.w_in,
+    )(x, tm, p.w_router, p.w_in,
       p.w_gate if p.w_gate is not None else jnp.zeros((1, 1, 1), x.dtype),
       p.w_out)
     y, aux = out
@@ -245,19 +298,23 @@ def moe_ref(
     p: MoeParams, x: jax.Array, *, top_k: int, norm_topk: bool = True,
     activation: str = "silu",
 ) -> jax.Array:
-    """Dense (no-drop, no-comm) reference: y = sum_k gate_k * FFN_{e_k}(x)."""
+    """Dense (no-drop, no-comm) reference: y = sum_k gate_k * FFN_{e_k}(x).
+    Accepts pre-quantized expert tables like :func:`moe_ffn` does."""
     B, S, d = x.shape
     xf = x.reshape(-1, d)
     logits = xf.astype(jnp.float32) @ p.w_router
     _, gates, idx = _top_k_gates(logits, top_k, norm_topk)
     E = p.w_router.shape[1]
-    h = jnp.einsum("td,edf->tef", xf, p.w_in.astype(xf.dtype))
-    if p.w_gate is not None:
-        g = jnp.einsum("td,edf->tef", xf, p.w_gate.astype(xf.dtype))
+    w_in = _maybe_dequant(p.w_in, xf.dtype)
+    w_gate = _maybe_dequant(p.w_gate, xf.dtype)
+    w_out = _maybe_dequant(p.w_out, xf.dtype)
+    h = jnp.einsum("td,edf->tef", xf, w_in.astype(xf.dtype))
+    if w_gate is not None:
+        g = jnp.einsum("td,edf->tef", xf, w_gate.astype(xf.dtype))
         h = apply_activation(g, activation) * h
     else:
         h = apply_activation(h, activation)
-    y_all = jnp.einsum("tef,efd->ted", h, p.w_out.astype(xf.dtype))
+    y_all = jnp.einsum("tef,efd->ted", h, w_out.astype(xf.dtype))
     y = jnp.zeros_like(xf, dtype=jnp.float32)
     for k in range(top_k):
         sel = jnp.take_along_axis(y_all, idx[:, k][:, None, None], axis=1)[:, 0]

@@ -52,9 +52,13 @@ def forward(params, batch: dict[str, Any], cfg: ModelConfig, mesh=None):
     raise ValueError(cfg.family)
 
 
-def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      per_slot: bool = False):
     if cfg.family in _LM_FAMILIES:
-        return lm.init_decode_state(cfg, batch, max_len)
+        return lm.init_decode_state(cfg, batch, max_len, per_slot=per_slot)
+    if per_slot:
+        raise ValueError(
+            f"per-slot decode state is LM-family only, not {cfg.family!r}")
     if cfg.family == "encdec":
         return encdec.init_decode_state(cfg, batch, max_len)
     if cfg.family == "vlm":
@@ -62,9 +66,13 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
     raise ValueError(cfg.family)
 
 
-def prefill(params, batch, cfg: ModelConfig, state, mesh=None):
+def prefill(params, batch, cfg: ModelConfig, state, mesh=None, last_pos=None):
     if cfg.family in _LM_FAMILIES:
-        return lm.prefill(params, batch["tokens"], cfg, state, mesh=mesh)
+        return lm.prefill(params, batch["tokens"], cfg, state, mesh=mesh,
+                          last_pos=last_pos)
+    if last_pos is not None:
+        raise ValueError(
+            f"prefill last_pos is LM-family only, not {cfg.family!r}")
     if cfg.family == "encdec":
         return encdec.prefill(params, batch, cfg, state, mesh=mesh)
     if cfg.family == "vlm":
@@ -72,9 +80,14 @@ def prefill(params, batch, cfg: ModelConfig, state, mesh=None):
     raise ValueError(cfg.family)
 
 
-def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None):
+def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
+                active=None):
     if cfg.family in _LM_FAMILIES:
-        return lm.decode_step(params, tokens, cfg, state, mesh=mesh)
+        return lm.decode_step(params, tokens, cfg, state, mesh=mesh,
+                              active=active)
+    if active is not None:
+        raise ValueError(
+            f"per-slot active masks are LM-family only, not {cfg.family!r}")
     if cfg.family == "encdec":
         return encdec.decode_step(params, tokens, cfg, state, mesh=mesh)
     if cfg.family == "vlm":

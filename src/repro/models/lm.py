@@ -352,7 +352,11 @@ def lm_loss(params, hidden, labels, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------- decode
-def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      per_slot: bool = False):
+    """``per_slot=True`` makes the KV length a (batch,) vector — one decode
+    position per slot lane, the continuous-batching engine's cache layout
+    (dense/moe only; other families keep their scalar/implicit clocks)."""
     L, d = cfg.n_layers, cfg.d_model
     if cfg.family in ("dense", "moe"):
         kv = attn.KVCache(
@@ -360,9 +364,12 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
                         cfg.dtype),
             v=jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
                         cfg.dtype),
-            length=jnp.zeros((), jnp.int32),
+            length=jnp.zeros((batch,) if per_slot else (), jnp.int32),
         )
         return {"kv": kv}
+    if per_slot:
+        raise ValueError(
+            f"per-slot decode state needs a KV-cache family, not {cfg.family!r}")
     if cfg.family == "rwkv":
         H, N = cfg.n_heads, d // cfg.n_heads
         return {
@@ -393,10 +400,16 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
     raise ValueError(cfg.family)
 
 
-def prefill(params, tokens, cfg: ModelConfig, state, mesh=None):
+def prefill(params, tokens, cfg: ModelConfig, state, mesh=None,
+            last_pos=None):
     """Full-sequence prefill populating the decode state.
 
-    Returns (last-token logits (B, Vp), new state)."""
+    Returns (last-token logits (B, Vp), new state). ``last_pos`` (scalar or
+    (B,) int32) selects which position's logits to return instead of the
+    final one — the serving engine right-pads every prompt to one fixed
+    length (one compiled prefill, one GEMM signature set) and reads logits
+    at each request's true last token; trailing pads are causally invisible
+    to it."""
     cm.set_activation_mesh(mesh)
     x = cm.embed_lookup(params["embed"], tokens, mesh).astype(cfg.dtype)
     S = tokens.shape[1]
@@ -474,13 +487,28 @@ def prefill(params, tokens, cfg: ModelConfig, state, mesh=None):
     else:
         raise ValueError(cfg.family)
 
-    h_last = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    if last_pos is None:
+        h_last = x[:, -1:]
+    else:
+        lp = jnp.broadcast_to(
+            jnp.asarray(last_pos, jnp.int32), (x.shape[0],))
+        h_last = jnp.take_along_axis(x, lp[:, None, None], axis=1)
+    h_last = apply_norm(cfg, params["final_norm"], h_last)
     return _logits(params, cfg, h_last)[:, 0], new_state
 
 
-def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None):
-    """One decode step. tokens (B, 1) -> (logits (B, Vp), new state)."""
+def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
+                active=None):
+    """One decode step. tokens (B, 1) -> (logits (B, Vp), new state).
+
+    ``active`` (B,) marks which rows are live decode lanes: the KV length of
+    an inactive slot does not advance (its pad-token write lands beyond the
+    valid prefix and is reclaimed by the next admission). Requires a per-KV-
+    cache family; the engine only schedules dense/moe models."""
     cm.set_activation_mesh(mesh)
+    if active is not None and cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"per-slot active masks need a KV-cache family, not {cfg.family!r}")
     x = cm.embed_lookup(params["embed"], tokens, mesh).astype(cfg.dtype)
     L = cfg.n_layers
 
@@ -497,10 +525,15 @@ def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None):
             x = x + y
             h2 = apply_norm(cfg, lp["ln2"], x)
             if cfg.family == "moe":
+                # vacant slot lanes must not compete for expert capacity:
+                # a live request's routing would otherwise depend on
+                # unrelated slot occupancy (engine determinism)
                 y2, _ = moe_lib.moe_ffn(
                     lp["moe"], h2, mesh=mesh, top_k=cfg.top_k,
                     capacity_factor=cfg.capacity_factor,
-                    activation=cfg.activation)
+                    activation=cfg.activation,
+                    token_mask=(None if active is None
+                                else (active > 0)[:, None]))
                 if cfg.dense_residual:
                     y2 = y2 + mlp_lib.mlp(lp["mlp"], h2,
                                           activation=cfg.activation)
@@ -509,7 +542,8 @@ def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None):
             return cm.hint(x + y2, "dp", None, "model"), (nc.k, nc.v)
 
         x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
-        new_state = {"kv": attn.KVCache(k=nk, v=nv, length=kv.length + 1)}
+        step = 1 if active is None else active.astype(kv.length.dtype)
+        new_state = {"kv": attn.KVCache(k=nk, v=nv, length=kv.length + step)}
     elif cfg.family == "rwkv":
         def body(carry, inp):
             x = carry

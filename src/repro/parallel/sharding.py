@@ -115,7 +115,15 @@ def decode_state_specs(state_shapes, cfg, mesh: Mesh):
     the *sequence* dim over 'data' (long_500k: batch=1, 512k cache) — the
     sequence-parallel cache layout; GSPMD then lowers decode attention to the
     flash-decode partial-softmax + combine pattern. SSM/WKV states: heads
-    over 'model'."""
+    over 'model'.
+
+    The serving engine's slot-lane cache reuses the batch rules verbatim:
+    its slot axis IS the cache batch axis, so ``num_slots`` divisible by the
+    DP extent shards the lanes over 'data' (each DP shard owns a contiguous
+    lane group; admissions write into one shard's region). The per-slot
+    ``length`` vector (B,) is replicated — every host-side admission and
+    eviction decision reads it, and at num_slots ints it is never worth
+    scattering."""
     dp = data_axes(mesh)
     sizes = mesh_axis_sizes(mesh)
     dp_total = int(np.prod([sizes[a] for a in dp])) if dp else 1
@@ -127,6 +135,8 @@ def decode_state_specs(state_shapes, cfg, mesh: Mesh):
                            for p in path)
         if x.ndim == 0:
             return P()
+        if "kv" in keyname and x.ndim == 1:
+            return P()  # per-slot length vector: replicated (see above)
         entries = [None] * x.ndim
         if keyname.split("/")[0] in ("enc", "img"):
             # (B, S, d) context tensors: batch-sharded when divisible

@@ -15,9 +15,13 @@ quantizer over the leading layer dim; the matching logical-axes transform
 keeps the partitioner working on the quantized tree (the (K, N)→(N, K)
 transpose swaps the leaf's logical axes).
 
-Families whose projections live in other containers (RWKV time-mix, Mamba,
-MoE expert tables) keep float weights — under ``quant_mode='int8'`` those
-fall back to the dynamic path, so a model is never half-broken.
+MoE expert tables quantize too: each (E, d, f)/(E, f, d) stack becomes a
+per-expert, per-output-channel ``QuantizedLinear`` that ``moe_ffn`` detects
+and dequantizes on-chip inside the expert einsum — int8 is what streams
+from HBM (the expert tables are the single largest weight traffic term in
+an MoE decode step). Families whose projections live in other containers
+(RWKV time-mix, Mamba) keep float weights — under ``quant_mode='int8'``
+those fall back to the dynamic path, so a model is never half-broken.
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ import jax
 
 from repro.layers.attention import AttnParams
 from repro.layers.mlp import MlpParams
+from repro.layers.moe import MoeParams
 from repro.quant.int8 import QuantizedLinear, quantize_linear
 
 
@@ -46,11 +51,16 @@ def _axes_for_weight(axes: tuple) -> QuantizedLinear:
 
 
 # Which fields of which containers are GEMM projection weights. Extending
-# pre-quantization to a new container (ROADMAP: MoE experts, RWKV) means
+# pre-quantization to a new container (ROADMAP leftover: RWKV/Mamba) means
 # adding one entry here — params and axes transforms stay in lockstep.
+# MoE expert tables are (E, d, f)/(E, f, d) stacks: the per-layer vmap in
+# _quantize_weight covers the expert dim the same way it covers the layer
+# dim, so each expert gets its own per-output-channel scales; the router
+# stays float (it is a tiny f32 GEMM feeding top-k, not a traffic term).
 _PROJECTION_FIELDS: dict[type, tuple[str, ...]] = {
     AttnParams: ("wq", "wk", "wv", "wo"),
     MlpParams: ("w_in", "w_gate", "w_out"),
+    MoeParams: ("w_in", "w_gate", "w_out"),
 }
 
 

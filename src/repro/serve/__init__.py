@@ -1,0 +1,16 @@
+"""repro.serve — continuous-batching serving engine (docs/serving.md).
+
+Request lifecycle (``request``) is host-side and dynamic; the compiled step
+functions (``train.servestep.make_engine_step``) are fixed-shape; the
+scheduler (``scheduler``) maps one onto the other through ``num_slots``
+decode lanes; ``engine`` runs the tick loop and ``metrics`` reports it.
+"""
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import EngineMetrics
+from repro.serve.request import Request, RequestState, synthetic_trace
+from repro.serve.scheduler import SlotScheduler
+
+__all__ = [
+    "ServeEngine", "EngineMetrics", "Request", "RequestState",
+    "SlotScheduler", "synthetic_trace",
+]

@@ -1,0 +1,218 @@
+"""Continuous-batching serving engine: fixed slot lanes, streaming requests.
+
+The step loop decouples request lifecycle (host-side scheduler) from the
+compiled step functions (device-side, fixed shapes):
+
+* every tick runs ONE masked decode step for all ``num_slots`` lanes —
+  vacant lanes are fed the pad token and excluded from sampling, and their
+  cache position does not advance;
+* admissions interleave between ticks: a single-request prefill (prompt
+  right-padded to one fixed ``prompt_pad``) writes its KV into the assigned
+  slot's cache region and yields the request's first token;
+* eviction on stop-id / max-new-tokens frees the lane for the queue head.
+
+Because slot count, prompt_pad, max_len and model dims are all fixed at
+engine build, every tick issues the identical GEMM signature set. The
+engine warms the plan cache by abstractly tracing its own two step
+functions (``plan_warmup``), then *asserts* the serving loop performs zero
+lazy plan solves (``PlanCache.expect_steady_state``) — the steady state the
+GemmContext/PlanCache subsystem exists to provide.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.core.context import current_context
+from repro.serve.metrics import EngineMetrics
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import SlotScheduler
+from repro.train.servestep import make_engine_step
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh,
+        params,
+        *,
+        num_slots: int,
+        max_len: int,
+        prompt_pad: int,
+        pad_id: int = 0,
+        param_axes=None,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.prompt_pad = prompt_pad
+        self.pad_id = pad_id
+        self.art = make_engine_step(
+            cfg, mesh, num_slots=num_slots, max_len=max_len,
+            prompt_pad=prompt_pad,
+            param_shapes=(None if param_axes is None
+                          else jax.eval_shape(lambda: params)),
+            param_axes=param_axes)
+        self._init_fn = jax.jit(
+            lambda: models.init_decode_state(cfg, num_slots, max_len,
+                                             per_slot=True),
+            out_shardings=self.art.state_shardings)
+        self._warmed = False
+        self.reset()
+
+    # ------------------------------------------------------------ state
+    def reset(self) -> None:
+        """Fresh scheduler/state/metrics; compiled functions are kept (the
+        benchmark times a second run to measure steady state, not XLA)."""
+        ctx = current_context()
+        with self.mesh:
+            self.state = self._init_fn()
+        self.sched = SlotScheduler(self.num_slots, max_len=self.max_len)
+        self._next_tok = np.full((self.num_slots,), self.pad_id, np.int64)
+        self.metrics = EngineMetrics(engine={
+            "arch": self.cfg.name,
+            "num_slots": self.num_slots,
+            "max_len": self.max_len,
+            "prompt_pad": self.prompt_pad,
+            "hw": ctx.hw.name,
+            "backend": ctx.matmul_backend,
+            "quant": ctx.quant_mode,
+        })
+
+    # ------------------------------------------------------------ warm-up
+    def plan_warmup(self) -> dict[str, int]:
+        """Pre-solve every GEMM signature the engine's two compiled step
+        functions issue (admission prefill + masked decode) by abstractly
+        tracing them — the engine-shaped analogue of ``core.gemm.plan_model``.
+        Marks the engine warm: subsequent ``run`` calls assert steady state.
+        """
+        cache = current_context().plan_cache
+        before = cache.stats.snapshot()
+        prompt = jax.ShapeDtypeStruct((1, self.prompt_pad), jnp.int32)
+        scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        toks = jax.ShapeDtypeStruct((self.num_slots, 1), jnp.int32)
+        active = jax.ShapeDtypeStruct((self.num_slots,), jnp.int32)
+        with cache.warmup():
+            jax.eval_shape(self.art.admit_raw, self.params,
+                           self.art.state_shapes, prompt, scalar, scalar)
+            jax.eval_shape(self.art.decode_raw, self.params,
+                           self.art.state_shapes, toks, active)
+        self._warmed = True
+        solved = cache.stats.warm_solves - before.warm_solves
+        signatures = len(cache.warm_keys)
+        return {"signatures": signatures, "solved": solved,
+                "from_cache": signatures - solved}
+
+    # ------------------------------------------------------------ intake
+    def submit(self, request: Request) -> Request:
+        if request.prompt_len > self.prompt_pad:
+            raise ValueError(
+                f"prompt_len={request.prompt_len} exceeds the engine's "
+                f"prompt_pad={self.prompt_pad}")
+        return self.sched.submit(request)
+
+    # ------------------------------------------------------------ ticking
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        """Greedy over the real vocab (the padded tail is never sampled)."""
+        return np.argmax(logits[..., : self.cfg.vocab_size], axis=-1)
+
+    def _finish(self, st: RequestState, reason: str, now: float) -> None:
+        self.sched.evict(st.slot, reason, now)
+        self.metrics.record_request(st)
+
+    def _budget(self, st: RequestState) -> int:
+        """Effective generation budget: the request's ask, clamped to the
+        slot's cache headroom (prompt + generated KV must fit max_len)."""
+        return min(st.request.max_new_tokens,
+                   self.max_len - st.request.prompt_len)
+
+    def _admit_all(self, now: float) -> int:
+        """Drain the queue into free lanes; each admission prefills and
+        yields the request's first token. Returns admissions performed."""
+        n = 0
+        while True:
+            st = self.sched.admit_next(now)
+            if st is None:
+                return n
+            n += 1
+            req = st.request
+            prompt = np.full((1, self.prompt_pad), self.pad_id, np.int32)
+            prompt[0, : req.prompt_len] = req.prompt
+            logits, self.state = self.art.admit_fn(
+                self.params, self.state, jnp.asarray(prompt),
+                jnp.asarray(st.slot, jnp.int32),
+                jnp.asarray(req.prompt_len, jnp.int32))
+            tok = int(self._sample(np.asarray(logits)))
+            now = time.perf_counter()
+            st.append(tok, now)
+            self._next_tok[st.slot] = tok
+            reason = ("length" if len(st.tokens) >= self._budget(st)
+                      else st.should_stop())
+            if reason:
+                self._finish(st, reason, now)
+
+    def tick(self) -> int:
+        """One engine tick: admissions, then one masked decode step for the
+        occupied lanes. Returns the number of tokens generated."""
+        now = time.perf_counter()
+        produced = self._admit_all(now)
+        mask = self.sched.active_mask()
+        occupied = int(mask.sum())
+        if occupied:
+            toks = np.where(mask, self._next_tok, self.pad_id)
+            logits, self.state = self.art.decode_fn(
+                self.params, self.state,
+                jnp.asarray(toks[:, None], jnp.int32),
+                jnp.asarray(mask, jnp.int32))
+            sampled = self._sample(np.asarray(logits))
+            now = time.perf_counter()
+            for slot in np.flatnonzero(mask):
+                st = self.sched.slots[slot]
+                tok = int(sampled[slot])
+                st.append(tok, now)
+                self._next_tok[slot] = tok
+                produced += 1
+                reason = ("length" if len(st.tokens) >= self._budget(st)
+                          else st.should_stop())
+                if reason:
+                    self._finish(st, reason, now)
+        self.metrics.record_tick(occupied, produced, self.sched.pending)
+        self.sched.tick += 1
+        return produced
+
+    # ------------------------------------------------------------ driving
+    def run(self, requests: Iterable[Request] = ()) -> EngineMetrics:
+        """Submit ``requests``, run ticks until queue and lanes drain, and
+        return the filled metrics. After ``plan_warmup`` the whole loop runs
+        under the zero-lazy-solve steady-state assertion."""
+        for r in requests:
+            self.submit(r)
+        cache = current_context().plan_cache
+        before = cache.stats.snapshot()
+        t0 = time.perf_counter()
+        if self._warmed:
+            with cache.expect_steady_state("serve-engine loop"):
+                while not self.sched.idle:
+                    self.tick()
+        else:
+            while not self.sched.idle:
+                self.tick()
+        self.metrics.wall_s = time.perf_counter() - t0
+        self.metrics.record_plan_cache(before, cache.stats.snapshot())
+        counters = self.sched.counters()
+        self.metrics.admissions = counters["admissions"]
+        self.metrics.evictions = counters["evictions"]
+        return self.metrics
+
+    @property
+    def finished(self) -> list[RequestState]:
+        return self.sched.finished

@@ -1,0 +1,115 @@
+"""Serving metrics: per-request latency, aggregate throughput, slot
+occupancy, and plan-cache warmth — exportable as JSON.
+
+Schema (``EngineMetrics.to_dict``, documented in docs/serving.md):
+
+```
+{
+  "engine": {num_slots, max_len, prompt_pad, arch, hw, backend, quant},
+  "aggregate": {wall_s, ticks, generated_tokens, tokens_per_sec,
+                mean_occupancy, admissions, evictions{reason: n},
+                queue_peak},
+  "requests": [{request_id, prompt_len, tokens, ttft_s, total_s,
+                per_token_s, finish_reason, admitted_tick, finished_tick}],
+  "plan_cache": {hits, misses, lazy_solves, warm_solves, steady_state}
+}
+```
+
+TTFT here is admission-to-first-token (the first token falls out of the
+admission prefill itself); queueing delay is visible separately as
+``admitted_tick - arrival_tick``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.core.plancache import PlanCacheStats
+from repro.serve.request import RequestState
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    engine: dict[str, Any] = dataclasses.field(default_factory=dict)
+    wall_s: float = 0.0
+    ticks: int = 0
+    generated_tokens: int = 0
+    occupancy_sum: int = 0        # sum over ticks of occupied slots
+    queue_peak: int = 0
+    admissions: int = 0
+    evictions: dict[str, int] = dataclasses.field(default_factory=dict)
+    requests: list[dict[str, Any]] = dataclasses.field(default_factory=list)
+    plan_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------ record
+    def record_tick(self, occupied: int, new_tokens: int,
+                    queued: int) -> None:
+        self.ticks += 1
+        self.occupancy_sum += occupied
+        self.generated_tokens += new_tokens
+        self.queue_peak = max(self.queue_peak, queued)
+
+    def record_request(self, st: RequestState) -> None:
+        req = st.request
+        total_s = (None if st.finished_s is None
+                   else st.finished_s - st.admitted_s)
+        n = len(st.tokens)
+        self.requests.append({
+            "request_id": req.request_id,
+            "prompt_len": req.prompt_len,
+            "tokens": n,
+            "ttft_s": (None if st.first_token_s is None
+                       else st.first_token_s - st.admitted_s),
+            "total_s": total_s,
+            "per_token_s": (total_s / n if total_s is not None and n else None),
+            "finish_reason": st.finish_reason,
+            "arrival_tick": req.arrival_tick,
+            "admitted_tick": st.admitted_tick,
+            "finished_tick": st.finished_tick,
+        })
+
+    def record_plan_cache(self, before: PlanCacheStats,
+                          after: PlanCacheStats) -> None:
+        lazy = after.lazy_solves - before.lazy_solves
+        misses = after.misses - before.misses
+        self.plan_cache = {
+            "hits": after.hits - before.hits,
+            "misses": misses,
+            "lazy_solves": lazy,
+            "warm_solves": after.warm_solves - before.warm_solves,
+            "steady_state": lazy == 0 and misses == 0,
+        }
+
+    # ------------------------------------------------------------ export
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.ticks if self.ticks else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "engine": dict(self.engine),
+            "aggregate": {
+                "wall_s": self.wall_s,
+                "ticks": self.ticks,
+                "generated_tokens": self.generated_tokens,
+                "tokens_per_sec": self.tokens_per_sec,
+                "mean_occupancy": self.mean_occupancy,
+                "admissions": self.admissions,
+                "evictions": dict(self.evictions),
+                "queue_peak": self.queue_peak,
+            },
+            "requests": list(self.requests),
+            "plan_cache": dict(self.plan_cache),
+        }
+
+    def to_json(self, path: str | None = None, **kw) -> str:
+        s = json.dumps(self.to_dict(), indent=2, **kw)
+        if path:
+            with open(path, "w") as f:
+                f.write(s + "\n")
+        return s

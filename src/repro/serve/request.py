@@ -1,0 +1,106 @@
+"""Request lifecycle records for the continuous-batching engine.
+
+A :class:`Request` is what a client submits (prompt, generation budget, stop
+ids); a :class:`RequestState` is the engine's host-side bookkeeping for it —
+which slot lane it occupies, its per-request token buffer, and the tick/wall
+timestamps the metrics layer turns into TTFT and per-token latency. Both are
+plain Python (numpy, no jax): the device only ever sees fixed-shape slot
+tensors, never a request object.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request as submitted.
+
+    ``prompt`` is a 1-D int32 token array; ``max_new_tokens`` bounds the
+    generation; any token in ``stop_ids`` ends it early (the stop token is
+    kept in the output, vLLM-style). ``arrival_tick`` is stamped by the
+    scheduler at submit time.
+    """
+
+    prompt: np.ndarray
+    max_new_tokens: int
+    stop_ids: tuple[int, ...] = ()
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    arrival_tick: int = -1
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.stop_ids = tuple(int(s) for s in self.stop_ids)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Engine-side state of an admitted (or finished) request."""
+
+    request: Request
+    slot: int                      # decode lane while active, last lane after
+    admitted_tick: int
+    admitted_s: float              # wall clock at admission (perf_counter)
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    first_token_s: float | None = None   # wall clock of the first token
+    finished_s: float | None = None
+    finished_tick: int | None = None
+    finish_reason: str | None = None     # 'stop' | 'length' | None (active)
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+    def append(self, token: int, now_s: float) -> None:
+        if self.first_token_s is None:
+            self.first_token_s = now_s
+        self.tokens.append(int(token))
+
+    def should_stop(self) -> str | None:
+        """Finish reason implied by the current token buffer, else None."""
+        if self.tokens and self.tokens[-1] in self.request.stop_ids:
+            return "stop"
+        if len(self.tokens) >= self.request.max_new_tokens:
+            return "length"
+        return None
+
+
+def synthetic_trace(
+    n_requests: int,
+    *,
+    vocab_size: int,
+    prompt_lens: Sequence[int],
+    max_new_tokens: Sequence[int],
+    stop_ids: tuple[int, ...] = (),
+    seed: int = 0,
+) -> list[Request]:
+    """A mixed-length request trace (benchmarks, smoke runs, tests).
+
+    Prompt lengths and generation budgets cycle through the given sequences,
+    so the mix is deterministic for a seed while still exercising uneven
+    lifetimes — the traffic shape static batching handles worst.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        plen = int(prompt_lens[i % len(prompt_lens)])
+        out.append(Request(
+            prompt=rng.integers(0, vocab_size, size=plen, dtype=np.int32),
+            max_new_tokens=int(max_new_tokens[i % len(max_new_tokens)]),
+            stop_ids=stop_ids,
+        ))
+    return out

@@ -1,0 +1,99 @@
+"""Slot-based scheduler: FIFO admission onto a fixed set of decode lanes.
+
+The engine's decode step is compiled once for ``num_slots`` lanes; the
+scheduler's whole job is to keep that shape true while requests come and go:
+
+* ``submit`` appends to a FIFO queue (arrival order is admission order);
+* ``admit_next`` binds the queue head to the lowest free slot — the engine
+  then runs the single-request prefill that writes the slot's KV region;
+* ``evict`` frees a slot on EOS / max-length so the next queued request can
+  reuse the lane (same buffer, new length — no allocation);
+* ``active_mask`` is the (num_slots,) occupancy the masked decode consumes.
+
+Pure host-side Python: no jax imports, trivially unit-testable.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+from repro.serve.request import Request, RequestState
+
+
+class SlotScheduler:
+    def __init__(self, num_slots: int, *, max_len: int):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[RequestState | None] = [None] * num_slots
+        self.tick = 0
+        self.finished: list[RequestState] = []
+        self._admissions = 0
+        self._evictions: dict[str, int] = {}
+
+    # ------------------------------------------------------------ queue
+    def submit(self, request: Request) -> Request:
+        if request.prompt_len >= self.max_len:
+            raise ValueError(
+                f"prompt_len={request.prompt_len} does not fit max_len="
+                f"{self.max_len} (need >= 1 token of decode headroom)")
+        request.arrival_tick = self.tick
+        self.queue.append(request)
+        return request
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # ------------------------------------------------------------ slots
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([s is not None for s in self.slots], bool)
+
+    def occupancy(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.occupancy() == 0
+
+    def admit_next(self, now_s: float = 0.0) -> RequestState | None:
+        """Bind the FIFO head to the lowest free slot; None if queue empty
+        or every lane is occupied."""
+        free = self.free_slots()
+        if not free or not self.queue:
+            return None
+        req = self.queue.popleft()
+        st = RequestState(
+            request=req, slot=free[0], admitted_tick=self.tick,
+            admitted_s=now_s)
+        self.slots[free[0]] = st
+        self._admissions += 1
+        return st
+
+    def evict(self, slot: int, reason: str, now_s: float = 0.0) -> RequestState:
+        st = self.slots[slot]
+        if st is None:
+            raise ValueError(f"evict of vacant slot {slot}")
+        st.finish_reason = reason
+        st.finished_tick = self.tick
+        st.finished_s = now_s
+        self.slots[slot] = None
+        self.finished.append(st)
+        self._evictions[reason] = self._evictions.get(reason, 0) + 1
+        return st
+
+    # ------------------------------------------------------------ stats
+    def counters(self) -> dict:
+        return {
+            "admissions": self._admissions,
+            "evictions": dict(self._evictions),
+            "pending": self.pending,
+            "occupied": self.occupancy(),
+            "ticks": self.tick,
+        }

@@ -16,6 +16,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import models
 from repro.configs.base import ModelConfig
+from repro.layers.attention import KVCache
 from repro.parallel import sharding as shd
 
 
@@ -77,6 +78,108 @@ def make_serve_step(
     return ServeArtifacts(
         prefill_fn=prefill_fn, decode_fn=decode_fn, param_shardings=pshard,
         state_shardings=sshard, state_shapes=state_shapes,
+    )
+
+
+@dataclasses.dataclass
+class EngineArtifacts:
+    """Compiled step functions for the continuous-batching engine.
+
+    ``decode_fn(params, state, tokens, active)`` — one masked decode tick
+    for all ``num_slots`` lanes; ``admit_fn(params, state, prompt, slot,
+    true_len)`` — single-request prefill whose KV lands in the assigned
+    slot's cache region. ``decode_raw``/``admit_raw`` are the untraced
+    python callables, kept so the engine's plan warm-up can
+    ``jax.eval_shape`` the exact signature set the compiled functions will
+    issue.
+    """
+
+    decode_fn: Callable
+    admit_fn: Callable
+    decode_raw: Callable
+    admit_raw: Callable
+    param_shardings: Any
+    state_shardings: Any
+    state_shapes: Any
+
+
+def make_engine_step(
+    cfg: ModelConfig, mesh: Mesh, *, num_slots: int, max_len: int,
+    prompt_pad: int, param_shapes=None, param_axes=None,
+) -> EngineArtifacts:
+    """Step factory for the slot-based serving engine.
+
+    Both functions are compiled exactly once per engine build: the decode
+    tick always sees (num_slots, 1) tokens against the (num_slots, max_len)
+    per-slot cache, and every admission prefills a (1, prompt_pad) prompt —
+    so steady-state traffic issues one fixed GEMM-signature set regardless
+    of the request mix (the shape stability the plan cache is built
+    around). Slot index and true prompt length are traced scalars, not
+    static args — admissions never trigger a recompile.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"the slot engine needs a KV-cache family (dense/moe), "
+            f"got {cfg.family!r}")
+    if not (0 < prompt_pad < max_len):
+        raise ValueError(
+            f"need 0 < prompt_pad ({prompt_pad}) < max_len ({max_len})")
+    axes = param_axes if param_axes is not None else models.axes(cfg)
+    if param_shapes is None:
+        param_shapes = jax.eval_shape(
+            lambda: models.init(jax.random.PRNGKey(0), cfg))
+    pshard = shd.param_shardings(axes, param_shapes, mesh)
+    state_shapes = jax.eval_shape(
+        lambda: models.init_decode_state(cfg, num_slots, max_len,
+                                         per_slot=True))
+    sspecs = shd.decode_state_specs(state_shapes, cfg, mesh)
+    sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    tok_shard = NamedSharding(mesh, shd.batch_specs(
+        {"t": jax.ShapeDtypeStruct((num_slots, 1), jnp.int32)}, mesh)["t"])
+    repl = NamedSharding(mesh, P())
+
+    def decode(params, state, tokens, active):
+        logits, new_state = models.decode_step(
+            params, tokens, cfg, state, mesh=mesh, active=active)
+        return logits, new_state
+
+    def admit(params, state, prompt, slot, true_len):
+        """Prefill `prompt` (1, prompt_pad; right-padded) and splice its KV
+        into lane ``slot`` of the engine cache via dynamic_update_slice on
+        the slot axis. Returns the request's first-token logits (Vp,)."""
+        sub = models.init_decode_state(cfg, 1, prompt_pad)
+        logits, sub = models.prefill(
+            params, {"tokens": prompt}, cfg, sub, mesh=mesh,
+            last_pos=true_len - 1)
+        kv, skv = state["kv"], sub["kv"]
+        start = (0, slot) + (0,) * (kv.k.ndim - 2)
+        new_kv = KVCache(
+            k=jax.lax.dynamic_update_slice(
+                kv.k, skv.k.astype(kv.k.dtype), start),
+            v=jax.lax.dynamic_update_slice(
+                kv.v, skv.v.astype(kv.v.dtype), start),
+            length=kv.length.at[slot].set(true_len),
+        )
+        return logits[0], {**state, "kv": new_kv}
+
+    decode_fn = jax.jit(
+        decode,
+        in_shardings=(pshard, sshard, tok_shard, repl),
+        out_shardings=(repl, sshard),
+        donate_argnums=(1,),
+    )
+    admit_fn = jax.jit(
+        admit,
+        in_shardings=(pshard, sshard, repl, repl, repl),
+        out_shardings=(repl, sshard),
+        donate_argnums=(1,),
+    )
+    return EngineArtifacts(
+        decode_fn=decode_fn, admit_fn=admit_fn,
+        decode_raw=decode, admit_raw=admit,
+        param_shardings=pshard, state_shardings=sshard,
+        state_shapes=state_shapes,
     )
 
 

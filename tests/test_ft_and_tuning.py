@@ -119,3 +119,60 @@ def test_property_grad_clip(scale):
     assert new_norm <= 1.0 + 1e-3
     assert float(norm) == pytest.approx(
         float(np.sqrt(16 * scale**2 + 3 * scale**2)), rel=1e-3)
+
+
+# ------------------------------------------- measured plan refinement
+def test_refine_cached_plans_keeps_measured_best():
+    """ROADMAP satellite: the warm-up's model-solved plans refine in place
+    under a measurement callback; a measure that prefers a neighbor moves
+    the cache entry there, and refinement never adds signatures."""
+    from repro.core.gemm import plan_for
+    from repro.core.plancache import PlanCache
+    from repro.core.context import use_context
+    from repro.kernels.ops import GemmPlan
+
+    cache = PlanCache()
+    with use_context(plan_cache=cache):
+        with cache.warmup():
+            plan_for(256, 512, 512, in_dtype=jnp.bfloat16)
+            plan_for(64, 512, 1024, in_dtype=jnp.bfloat16)
+        assert len(cache.warm_keys) == 2
+        seed_plans = dict(cache.entries)
+
+        target = GemmPlan(bm=8, bk=128, bn=128)
+
+        def factory(M, K, N, **kw):
+            # prefer plans closest to `target` — deterministic, instant
+            def fn(plan):
+                return abs(plan.bm - target.bm) + abs(plan.bk - target.bk) \
+                    + abs(plan.bn - target.bn)
+            return fn
+
+        stats = autotune.refine_cached_plans(
+            cache, measure_factory=factory, rounds=8)
+        assert stats["measured"] > 2 and stats["skipped"] == 0
+        assert stats["refined"] + stats["kept"] == 2
+        assert len(cache.entries) == len(seed_plans)  # no new signatures
+        for key, seed in seed_plans.items():
+            new = cache.entries[key]
+
+            def d(p):
+                return (abs(p.bm - target.bm) + abs(p.bk - target.bk)
+                        + abs(p.bn - target.bn))
+            assert d(new) <= d(seed)  # measured-best never regresses
+
+
+def test_refine_cached_plans_wallclock_smoke():
+    """The default wall-clock measure path runs end-to-end on a tiny
+    signature (interpret-mode kernel timing)."""
+    from repro.core.gemm import plan_for
+    from repro.core.plancache import PlanCache
+    from repro.core.context import use_context
+
+    cache = PlanCache()
+    with use_context(plan_cache=cache):
+        with cache.warmup():
+            plan_for(32, 256, 128, in_dtype=jnp.float32)
+        stats = autotune.refine_cached_plans(cache, repeats=1)
+    assert stats["measured"] >= 1
+    assert stats["refined"] + stats["kept"] == 1

@@ -91,3 +91,37 @@ def test_topk_gate_normalization():
                          jnp.float32)
     _, gates, _ = moe._top_k_gates(logits, 3, norm_topk=True)
     np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_moe_token_mask_isolates_live_tokens():
+    """Engine determinism: dead tokens (vacant pad lanes) must not route,
+    must not consume expert capacity, and must return zero rows — a live
+    token's output is identical whether or not it shares the batch with
+    any number of identical dead tokens."""
+    from repro import configs as C
+    from repro import models
+    from repro.launch.mesh import make_local_mesh
+    from repro.layers import moe as moe_lib
+
+    cfg = C.smoke(C.get_config("olmoe-1b-7b"))
+    p = jax.tree.map(lambda x: x[0],
+                     models.init(jax.random.PRNGKey(0), cfg)["layers"]["moe"])
+    mesh = make_local_mesh()
+    rng = np.random.default_rng(3)
+    live = jnp.asarray(rng.normal(size=(1, 1, cfg.d_model)), jnp.float32)
+    # 32 identical dead rows: unmasked they would flood one expert's
+    # capacity bucket and could evict the live token's assignment
+    dead = jnp.broadcast_to(jnp.asarray(
+        rng.normal(size=(1, 1, cfg.d_model)), jnp.float32),
+        (32, 1, cfg.d_model))
+    x = jnp.concatenate([live, dead], axis=0)
+    mask = jnp.asarray([[True]] + [[False]] * 32)
+    y_masked, _ = moe_lib.moe_ffn(
+        p, x, mesh=mesh, top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor, token_mask=mask)
+    y_alone, _ = moe_lib.moe_ffn(
+        p, live, mesh=mesh, top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor)
+    np.testing.assert_allclose(np.asarray(y_masked[0]),
+                               np.asarray(y_alone[0]), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(y_masked[1:]), 0.0)

@@ -258,3 +258,68 @@ def test_plan_cache_keys_on_dtype():
     p16 = gemm.plan_for(4096, 4096, 4096, in_dtype=jnp.bfloat16)
     assert p8 != p16
     assert gemm.plan_for(4096, 4096, 4096, in_dtype=jnp.int8) is p8
+
+
+# ------------------------------------------------- MoE pre-quantization
+def test_prequant_moe_expert_tables_become_quantized_linear():
+    """ROADMAP satellite: MoE expert weight tables pre-quantize like
+    attention/MLP projections (per-expert, per-output-channel scales); the
+    router stays float and the axes tree transforms in lockstep."""
+    from repro import configs as C
+    from repro import models
+    from repro.quant import prequant
+    from repro.quant.int8 import QuantizedLinear
+
+    cfg = C.smoke(C.get_config("olmoe-1b-7b"))
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    qp = prequant.quantize_params(params)
+    moe = qp["layers"]["moe"]
+    L, E = cfg.n_layers, cfg.n_experts
+    for leaf, kn in [(moe.w_in, (cfg.d_model, cfg.d_ff)),
+                     (moe.w_gate, (cfg.d_model, cfg.d_ff)),
+                     (moe.w_out, (cfg.d_ff, cfg.d_model))]:
+        assert isinstance(leaf, QuantizedLinear)
+        K, N = kn
+        assert leaf.w_q.shape == (L, E, N, K) and leaf.w_q.dtype == jnp.int8
+        assert leaf.w_scale.shape == (L, E, N)
+    assert not isinstance(moe.w_router, QuantizedLinear)
+
+    axes = prequant.quantize_axes(models.axes(cfg))["layers"]["moe"]
+    assert axes.w_in.w_q == ("layers", "expert", "ffn", "embed")
+    assert axes.w_in.w_scale == ("layers", "expert", "ffn")
+    assert axes.w_out.w_q == ("layers", "expert", "embed", "ffn")
+
+    # axes/param trees must still flatten in lockstep for the partitioner
+    from repro.models.lm import is_axes_leaf
+    n_ax = len(jax.tree.leaves(prequant.quantize_axes(models.axes(cfg)),
+                               is_leaf=is_axes_leaf))
+    n_p = len(jax.tree.leaves(qp))
+    assert n_ax == n_p
+
+
+def test_prequant_moe_ffn_numerics_close_to_float():
+    """The dispatched MoE path consumes QuantizedLinear expert tables and
+    stays within int8 error of the float path; it matches the dense
+    reference on the same quantized tree exactly."""
+    from repro import configs as C
+    from repro import models
+    from repro.launch.mesh import make_local_mesh
+    from repro.layers import moe as moe_lib
+    from repro.quant import prequant
+
+    cfg = C.smoke(C.get_config("olmoe-1b-7b"))
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    qp = prequant.quantize_params(params)
+    lp = jax.tree.map(lambda x: x[0], params["layers"]["moe"])
+    lq = jax.tree.map(lambda x: x[0], qp["layers"]["moe"])
+    mesh = make_local_mesh()
+    x = _randf((2, 8, cfg.d_model), 0.5)
+    yf, _ = moe_lib.moe_ffn(lp, x, mesh=mesh, top_k=cfg.top_k,
+                            capacity_factor=cfg.capacity_factor)
+    yq, _ = moe_lib.moe_ffn(lq, x, mesh=mesh, top_k=cfg.top_k,
+                            capacity_factor=cfg.capacity_factor)
+    rel = float(jnp.linalg.norm(yq - yf) / jnp.linalg.norm(yf))
+    assert rel < 0.05, rel
+    yr = moe_lib.moe_ref(lq, x, top_k=cfg.top_k)
+    np.testing.assert_allclose(np.asarray(yq), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)

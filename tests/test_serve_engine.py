@@ -1,0 +1,219 @@
+"""Continuous-batching engine: scheduler policy, engine/static parity,
+plan-cache steady state, EOS handling, and metrics export."""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro import models
+from repro.core.context import current_context, use_context
+from repro.core.plancache import PlanCache, PlanCacheColdError
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import serve_batch
+from repro.serve import Request, ServeEngine, SlotScheduler, synthetic_trace
+
+EOS = 17
+
+
+def _requests(spec, vocab=503, stop=(EOS,), seed=7):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(0, vocab, size=p, dtype=np.int32),
+                max_new_tokens=g, stop_ids=stop)
+        for p, g in spec
+    ]
+
+
+# ------------------------------------------------------------- scheduler
+def test_scheduler_admission_is_fifo():
+    s = SlotScheduler(2, max_len=32)
+    reqs = _requests([(4, 4), (4, 4), (4, 4)])
+    for r in reqs:
+        s.submit(r)
+    a, b = s.admit_next(), s.admit_next()
+    assert (a.request.request_id, b.request.request_id) == (
+        reqs[0].request_id, reqs[1].request_id)
+    assert s.admit_next() is None            # both lanes occupied
+    assert [a.slot, b.slot] == [0, 1]
+    s.evict(0, "length")
+    c = s.admit_next()
+    assert c.request.request_id == reqs[2].request_id
+
+
+def test_scheduler_reuses_evicted_slots():
+    s = SlotScheduler(2, max_len=32)
+    for r in _requests([(4, 4)] * 5):
+        s.submit(r)
+    first = s.admit_next()
+    s.admit_next()
+    s.evict(first.slot, "stop")
+    again = s.admit_next()
+    assert again.slot == first.slot          # lowest freed lane is reused
+    assert s.occupancy() == 2 and s.pending == 2
+    assert s.counters()["evictions"] == {"stop": 1}
+
+
+def test_scheduler_rejects_oversized_prompt():
+    s = SlotScheduler(1, max_len=8)
+    with pytest.raises(ValueError):
+        s.submit(_requests([(8, 1)])[0])     # no decode headroom
+
+
+# ------------------------------------------------------- engine vs static
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = C.smoke(C.get_config("qwen1.5-4b"))
+    mesh = make_local_mesh()
+    params = models.init(jax.random.PRNGKey(3), cfg)
+    return cfg, mesh, params
+
+
+def test_engine_matches_isolated_static_decode(dense_setup):
+    """Greedy determinism: a mixed-length trace through the slot engine
+    produces exactly the tokens each request gets when served alone through
+    static serve_batch (padded prefill + per-slot decode are bit-exact)."""
+    cfg, mesh, params = dense_setup
+    spec = [(12, 8), (5, 8), (9, 3), (12, 6), (3, 8), (7, 8), (6, 1)]
+    engine = ServeEngine(cfg, mesh, params, num_slots=3, max_len=21,
+                         prompt_pad=12)
+    engine.plan_warmup()
+    engine.run(_requests(spec))
+    assert len(engine.finished) == len(spec)
+    by_prompt = {st.request.prompt.tobytes(): st.tokens
+                 for st in engine.finished}
+
+    for r in _requests(spec):
+        alone = np.asarray(serve_batch(
+            cfg, mesh, params, jnp.asarray(r.prompt[None]),
+            gen_len=r.max_new_tokens,
+            max_len=r.prompt_len + r.max_new_tokens + 1,
+            eos_id=EOS)[0])
+        want = alone.tolist()
+        if EOS in want:
+            want = want[: want.index(EOS) + 1]
+        assert by_prompt[r.prompt.tobytes()] == want
+
+
+def test_engine_steady_state_zero_lazy_solves(dense_setup):
+    """After plan_warmup the serving loop must not touch the solver: zero
+    lazy solves and zero misses, tracked per-run in the metrics export."""
+    cfg, mesh, params = dense_setup
+    with use_context(plan_cache=PlanCache()):
+        cache = current_context().plan_cache
+        engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=16,
+                             prompt_pad=8)
+        warm = engine.plan_warmup()
+        assert warm["signatures"] > 0 and warm["solved"] > 0
+        before = cache.stats.snapshot()
+        m = engine.run(_requests([(8, 4), (4, 6), (6, 2), (5, 5)]))
+        assert cache.stats.lazy_solves == before.lazy_solves
+        assert cache.stats.misses == before.misses
+        assert m.plan_cache["lazy_solves"] == 0
+        assert m.plan_cache["misses"] == 0
+        assert m.plan_cache["steady_state"] is True
+
+
+def test_expect_steady_state_raises_when_cold():
+    cache = PlanCache()
+    from repro.core.gemm import plan_for
+    with use_context(plan_cache=cache):
+        with pytest.raises(PlanCacheColdError):
+            with cache.expect_steady_state("cold test"):
+                plan_for(256, 512, 512, in_dtype=jnp.bfloat16)
+
+
+def test_engine_metrics_export(dense_setup, tmp_path):
+    cfg, mesh, params = dense_setup
+    engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=16,
+                         prompt_pad=8)
+    engine.plan_warmup()
+    m = engine.run(_requests([(8, 4), (4, 2), (6, 3)]))
+    path = tmp_path / "metrics.json"
+    m.to_json(str(path))
+    d = json.loads(path.read_text())
+    assert d["engine"]["num_slots"] == 2
+    agg = d["aggregate"]
+    assert agg["generated_tokens"] == sum(len(s.tokens)
+                                          for s in engine.finished)
+    assert agg["admissions"] == 3 and sum(agg["evictions"].values()) == 3
+    assert 0 < agg["mean_occupancy"] <= 2
+    assert agg["tokens_per_sec"] > 0
+    for r in d["requests"]:
+        assert r["ttft_s"] is not None and r["ttft_s"] >= 0
+        assert r["per_token_s"] > 0
+        assert r["finish_reason"] in ("stop", "length")
+    assert d["plan_cache"]["steady_state"] is True
+
+
+def test_engine_respects_stop_ids_and_budget(dense_setup):
+    cfg, mesh, params = dense_setup
+    engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=20,
+                         prompt_pad=8)
+    # stop on every token id: each request must finish with exactly 1 token
+    reqs = _requests([(4, 5), (6, 5)], stop=tuple(range(cfg.vocab_size)))
+    engine.run(reqs)
+    for st in engine.finished:
+        assert st.finish_reason == "stop" and len(st.tokens) == 1
+    engine.reset()
+    engine.run(_requests([(4, 3), (6, 2)], stop=()))
+    assert sorted(len(s.tokens) for s in engine.finished) == [2, 3]
+    assert all(s.finish_reason == "length" for s in engine.finished)
+
+
+# --------------------------------------------------------- static EOS fix
+def test_serve_batch_stops_per_sequence_on_eos(dense_setup):
+    """With eos_id, generation for a row ends at its first stop token and
+    the tail is pad — rows are independent (engine-comparable outputs)."""
+    cfg, mesh, params = dense_setup
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (3, 6)), jnp.int32)
+    plain = np.asarray(serve_batch(cfg, mesh, params, prompts,
+                                   gen_len=8, max_len=15))
+    # pick an eos that actually occurs mid-stream in some row
+    counts = {}
+    for row in plain:
+        for t in row[:-1]:
+            counts[int(t)] = counts.get(int(t), 0) + 1
+    eos = max(counts, key=counts.get)
+    stopped = np.asarray(serve_batch(cfg, mesh, params, prompts,
+                                     gen_len=8, max_len=15, eos_id=eos))
+    assert stopped.shape == plain.shape
+    for row_p, row_s in zip(plain, stopped):
+        lp = row_p.tolist()
+        if eos in lp:
+            cut = lp.index(eos) + 1
+            assert row_s.tolist()[:cut] == lp[:cut]
+            assert all(t == 0 for t in row_s.tolist()[cut:])
+        else:
+            assert row_s.tolist() == lp
+
+
+# ------------------------------------------------------------ moe engine
+def test_engine_on_prequantized_moe():
+    """The engine runs a pre-quantized MoE model (expert tables as
+    QuantizedLinear leaves) and stays plan-warm."""
+    from repro.quant import prequant
+
+    cfg = C.smoke(C.get_config("olmoe-1b-7b"))
+    mesh = make_local_mesh()
+    params = prequant.quantize_params(models.init(jax.random.PRNGKey(0), cfg))
+    axes = prequant.quantize_axes(models.axes(cfg))
+    with use_context(plan_cache=PlanCache(), quant_mode="int8"):
+        engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=14,
+                             prompt_pad=6, param_axes=axes)
+        engine.plan_warmup()
+        m = engine.run(_requests([(6, 4), (3, 2), (5, 3)], stop=()))
+        assert m.plan_cache["steady_state"] is True
+        assert sorted(len(s.tokens) for s in engine.finished) == [2, 3, 4]
+
+
+def test_synthetic_trace_shapes():
+    tr = synthetic_trace(5, vocab_size=100, prompt_lens=[4, 8],
+                         max_new_tokens=[2, 3], stop_ids=(1,))
+    assert [r.prompt_len for r in tr] == [4, 8, 4, 8, 4]
+    assert [r.max_new_tokens for r in tr] == [2, 3, 2, 3, 2]
+    assert all(r.stop_ids == (1,) for r in tr)
+    assert all(r.prompt.max() < 100 for r in tr)
