@@ -15,6 +15,12 @@ exactly what the engine generates and strictly less than what static
 computes. Also asserts the engine's steady state: zero lazy plan solves
 and zero cache misses after its warm-up.
 
+A third run serves the same trace through the **paged** engine (block-pool
+KV + chunked prefill) with a pool sized at ~half the contiguous cache; it
+must match the contiguous engine token-for-token, stay plan-warm, and its
+whole-pool footprint must be <= 0.5x the contiguous per-slot footprint at
+the same decode width — the memory-balance claim of the paged refactor.
+
   PYTHONPATH=src python benchmarks/serve_engine.py --json BENCH_serve.json
 """
 from __future__ import annotations
@@ -45,6 +51,13 @@ NUM_SLOTS = 4
 PROMPT_PAD = max(PROMPT_LENS)
 GEN_MAX = max(MAX_NEW)
 MAX_LEN = PROMPT_PAD + GEN_MAX + 1
+# paged run: 8-token blocks, pool of 10 usable blocks (+ null) = 88 pool
+# tokens vs the contiguous 4*45 = 180 — 0.49x footprint. Tight enough that
+# admissions defer when four long requests coincide (exercising the
+# refusal path) while every request still fits (largest = 44 tokens).
+KV_BLOCK = 8
+NUM_KV_BLOCKS = 11
+PREFILL_CHUNK = 8
 
 
 def bench_config():
@@ -106,10 +119,7 @@ def run_static(cfg, mesh, params) -> dict:
     }
 
 
-def run_engine(cfg, mesh, params) -> dict:
-    engine = ServeEngine(cfg, mesh, params, num_slots=NUM_SLOTS,
-                         max_len=MAX_LEN, prompt_pad=PROMPT_PAD)
-    warm = engine.plan_warmup()
+def _engine_result(engine, cfg, warm) -> dict:
     engine.run(_trace(cfg))      # compile
     engine.reset()
     m = engine.run(_trace(cfg))  # steady-state measurement
@@ -124,8 +134,31 @@ def run_engine(cfg, mesh, params) -> dict:
         "ticks": agg["ticks"],
         "plan_warmup": warm,
         "plan_cache": d["plan_cache"],
+        "tokens_by_request": {
+            st.request.prompt.tobytes().hex(): st.tokens
+            for st in engine.finished},
         "metrics": d,
     }
+
+
+def run_engine(cfg, mesh, params) -> dict:
+    engine = ServeEngine(cfg, mesh, params, num_slots=NUM_SLOTS,
+                         max_len=MAX_LEN, prompt_pad=PROMPT_PAD)
+    warm = engine.plan_warmup()
+    return _engine_result(engine, cfg, warm)
+
+
+def run_paged(cfg, mesh, params) -> dict:
+    engine = ServeEngine(
+        cfg, mesh, params, num_slots=NUM_SLOTS, max_len=MAX_LEN,
+        prompt_pad=PROMPT_PAD, kv_block_size=KV_BLOCK,
+        num_kv_blocks=NUM_KV_BLOCKS, prefill_chunk=PREFILL_CHUNK)
+    warm = engine.plan_warmup()
+    out = _engine_result(engine, cfg, warm)
+    out["block_pool"] = out["metrics"]["block_pool"]
+    out["deferred_admissions"] = (
+        out["metrics"]["aggregate"]["deferred_admissions"])
+    return out
 
 
 def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
@@ -135,7 +168,10 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
     with use_context():
         static = run_static(cfg, mesh, params)
         engine = run_engine(cfg, mesh, params)
+        paged = run_paged(cfg, mesh, params)
     speedup = engine["tokens_per_sec"] / static["tokens_per_sec"]
+    token_match = (paged["tokens_by_request"] == engine["tokens_by_request"])
+    mem_ratio = paged["block_pool"]["memory_ratio"]
     emit(f"serve/static,{static['wall_s']*1e6/static['useful_tokens']:.1f},"
          f"tput={static['tokens_per_sec']:.1f}tok/s "
          f"steps={static['computed_token_steps']}")
@@ -144,7 +180,16 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
          f"steps={engine['computed_token_steps']} "
          f"occ={engine['mean_occupancy']:.2f} speedup={speedup:.2f}x "
          f"steady={engine['plan_cache']['steady_state']}")
-    result = {"static": static, "engine": engine, "speedup": speedup,
+    emit(f"serve/paged,{paged['wall_s']*1e6/paged['useful_tokens']:.1f},"
+         f"tput={paged['tokens_per_sec']:.1f}tok/s "
+         f"mem={mem_ratio:.2f}x match={token_match} "
+         f"deferred={paged['deferred_admissions']} "
+         f"steady={paged['plan_cache']['steady_state']}")
+    for r in (engine, paged):
+        r.pop("tokens_by_request")  # parity input, noise in the JSON
+    result = {"static": static, "engine": engine, "paged": paged,
+              "speedup": speedup, "paged_token_match": token_match,
+              "paged_memory_ratio": mem_ratio,
               "requests": N_REQUESTS, "num_slots": NUM_SLOTS,
               "prompt_lens": list(PROMPT_LENS), "max_new": list(MAX_NEW)}
     if json_path:
@@ -160,6 +205,15 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
         if speedup <= 1.0:
             raise SystemExit(
                 f"engine did not beat static batching: {speedup:.2f}x")
+        if not paged["plan_cache"]["steady_state"]:
+            raise SystemExit("paged engine loop was not plan-warm")
+        if not token_match:
+            raise SystemExit(
+                "paged engine diverged from the contiguous engine")
+        if mem_ratio > 0.5:
+            raise SystemExit(
+                f"paged pool footprint {mem_ratio:.2f}x exceeds the 0.5x "
+                f"contiguous bound")
     return result
 
 

@@ -66,6 +66,29 @@ def add_serve_engine_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
         help="stop id: requests/sequences end early on this token "
              "(both engine and static paths)")
     g.add_argument(
+        "--kv-block-size", type=int, default=0, metavar="B",
+        help="paged KV: pool the engine cache in B-token blocks behind "
+             "per-slot block tables (0 = contiguous per-slot regions); "
+             "enables chunked prefill")
+    g.add_argument(
+        "--num-kv-blocks", type=int, default=None, metavar="N",
+        help="paged KV pool size in blocks incl. the reserved null block "
+             "(default: full num_slots*max_len capacity; shrink it to make "
+             "footprint track admitted tokens — short admissions defer)")
+    g.add_argument(
+        "--prefill-chunk", type=int, default=None, metavar="C",
+        help="chunked prefill: admit prompts at most C tokens per tick, "
+             "interleaved with decode (paged engine only; default: "
+             "prompt pad). Chunks round up to <=3 bucket lengths "
+             "{C/4, C/2, C} so prefill stays plan-warm")
+    g.add_argument(
+        "--temperature", type=float, default=0.0, metavar="T",
+        help="sampling temperature (0 = greedy; host-side, per-request "
+             "seeded streams)")
+    g.add_argument(
+        "--top-p", type=float, default=1.0, metavar="P",
+        help="nucleus sampling mass (with --temperature > 0)")
+    g.add_argument(
         "--metrics-json", default=None, metavar="PATH",
         help="write the engine's serve metrics JSON here")
     g.add_argument(

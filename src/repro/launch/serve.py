@@ -27,6 +27,11 @@ GEMM signature set (docs/serving.md):
 
   PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
       --num-slots 4 --prompt-len 12 --gen 16 --metrics-json serve.json
+
+``--kv-block-size`` switches the engine's cache to the paged block-pool
+layout (per-slot block tables, chunked prefill via ``--prefill-chunk``,
+pool sized by ``--num-kv-blocks``); ``--temperature``/``--top-p`` enable
+host-side per-request-seeded sampling. See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -123,7 +128,11 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
     plen = args.prompt_len
     engine = ServeEngine(
         cfg, mesh, params, num_slots=args.num_slots,
-        max_len=plen + gen + 1, prompt_pad=plen, param_axes=param_axes)
+        max_len=plen + gen + 1, prompt_pad=plen, param_axes=param_axes,
+        kv_block_size=args.kv_block_size or None,
+        num_kv_blocks=args.num_kv_blocks,
+        prefill_chunk=args.prefill_chunk,
+        temperature=args.temperature, top_p=args.top_p)
     if not args.no_warmup:
         t0 = time.perf_counter()
         warm = engine.plan_warmup()
@@ -140,12 +149,21 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
         seed=0)
     m = engine.run(trace)
     qtag = f" quant={ctx.quant_mode}" if ctx.quant_mode else ""
-    print(f"[engine] arch={cfg.name}{qtag} hw={ctx.hw.name} "
+    ptag = (f" paged(block={engine.kv_block_size},"
+            f"pool={engine.num_kv_blocks})" if engine.paged else "")
+    print(f"[engine]{ptag} arch={cfg.name}{qtag} hw={ctx.hw.name} "
           f"backend={ctx.matmul_backend} slots={args.num_slots}: "
           f"{len(trace)} requests, {m.generated_tokens} tokens in "
           f"{m.wall_s:.2f}s ({m.tokens_per_sec:.1f} tok/s incl. compile), "
           f"mean occupancy {m.mean_occupancy:.2f}/{args.num_slots}, "
           f"{m.ticks} ticks")
+    if engine.paged:
+        bp = m.block_pool
+        print(f"[block-pool] peak {bp['peak_in_use']}/{bp['num_blocks'] - 1} "
+              f"blocks ({bp['peak_utilization']:.2f} util), memory ratio "
+              f"{bp['memory_ratio']:.2f}x contiguous, "
+              f"{m.deferred_admissions} deferred admissions, "
+              f"peak internal frag {bp['peak_fragmentation_tokens']} tokens")
     pc = m.plan_cache
     print(f"[plan-cache] serving: hits={pc['hits']} misses={pc['misses']} "
           f"lazy_solves={pc['lazy_solves']} "

@@ -334,6 +334,160 @@ def decode_attention(
     return out, KVCache(k=ck, v=cv, length=pos + 1)
 
 
+class PagedKVCache(NamedTuple):
+    """Block-pool KV cache (vLLM-style paged layout).
+
+    K/V live in a flat pool of fixed-size token blocks shared by every slot
+    lane; a per-slot block table maps logical token positions to pool
+    blocks. Capacity is proportional to admitted tokens instead of
+    ``num_slots * max_len`` — the serving-side rendition of the paper's
+    memory-balance argument (``serve/blockpool.py`` is the allocator).
+    The table-directed gather back to the logical
+    (slots, max_blocks * block_size, ...) layout happens *inside* the
+    traced attention functions below — kernel-visible layout, never a
+    host-side copy — so the masked contraction is the contiguous cache's,
+    byte for byte.
+
+    Block 0 is the reserved null block: vacant table entries point at it and
+    redirected (inactive-lane / pad-position) writes land in it, so freed
+    blocks are reusable without scrubbing. Every value a gather can read is
+    finite, and invalid positions are masked to ``NEG_INF`` before softmax,
+    so garbage never reaches a live request's output.
+    """
+
+    k: jax.Array        # (num_blocks, block_size, Hkv, Dh)
+    v: jax.Array        # (num_blocks, block_size, Hkv, Dh)
+    table: jax.Array    # (num_slots, max_blocks) int32 pool-block ids
+    length: jax.Array   # (num_slots,) int32 tokens written per slot
+
+
+def init_paged_kv_cache(num_slots, num_blocks, block_size, max_blocks,
+                        n_kv_heads, head_dim, dtype=jnp.bfloat16):
+    return PagedKVCache(
+        k=jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), dtype),
+        table=jnp.zeros((num_slots, max_blocks), jnp.int32),
+        length=jnp.zeros((num_slots,), jnp.int32),
+    )
+
+
+def paged_prefill_attention(
+    p: AttnParams, x: jax.Array, cache: PagedKVCache, *,
+    slot: jax.Array, start: jax.Array, true_len: jax.Array,
+    rope_theta: float = 10000.0, use_rope: bool = True,
+) -> tuple[jax.Array, PagedKVCache]:
+    """One prefill *chunk* for the request occupying ``slot``.
+
+    ``x`` is (1, C, d): chunk tokens right-padded to the bucket length C;
+    ``start`` is how many prompt tokens earlier chunks already wrote, and
+    ``true_len`` (<= C) how many of this chunk's tokens are real. The chunk's
+    K/V scatter into the slot's pool blocks at logical positions
+    ``start..start+true_len-1`` (pad positions redirect to the null block),
+    then queries attend causally to the slot's whole written prefix through
+    the block table — so chunked prefill sees exactly the key set whole-
+    prompt prefill sees, position for position.
+    """
+    B, C, _ = x.shape
+    assert B == 1
+    nb, bs, n_kv, hd = cache.k.shape
+    mb = cache.table.shape[1]
+    q = cm.dense(x, p.wq, p.bq).reshape(B, C, -1, hd)
+    k = cm.dense(x, p.wk, p.bk).reshape(B, C, n_kv, hd)
+    v = cm.dense(x, p.wv, p.bv).reshape(B, C, n_kv, hd)
+    pos = start + jnp.arange(C)
+    if use_rope:
+        sin, cos = cm.rotary_embedding(pos[None, :], hd, rope_theta)
+        q = cm.apply_rotary(q, sin, cos)
+        k = cm.apply_rotary(k, sin, cos)
+    # scatter the chunk's valid K/V into the slot's blocks
+    valid = jnp.arange(C) < true_len
+    row = cache.table[slot]                               # (max_blocks,)
+    blk = jnp.where(valid, row[jnp.minimum(pos // bs, mb - 1)], 0)
+    off = jnp.where(valid, pos % bs, 0)
+    ck = cache.k.at[blk, off].set(k[0].astype(cache.k.dtype), mode="drop")
+    cv = cache.v.at[blk, off].set(v[0].astype(cache.v.dtype), mode="drop")
+    new_cache = PagedKVCache(k=ck, v=cv, table=cache.table,
+                             length=cache.length)
+    # gather the slot's full logical region (prefix + this chunk) and run
+    # the same masked contraction plain_attention would
+    n_heads = q.shape[2]
+    kr = ck[row].reshape(1, mb * bs, n_kv, hd)
+    vr = cv[row].reshape(1, mb * bs, n_kv, hd)
+    kr = _repeat_kv(kr, n_heads // n_kv)
+    vr = _repeat_kv(vr, n_heads // n_kv)
+    scale = hd ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * jnp.asarray(scale, q.dtype),
+                   kr.astype(q.dtype), preferred_element_type=jnp.float32)
+    kpos = jnp.arange(mb * bs)
+    mask = kpos[None, :] <= pos[:, None]                  # causal, (C, S)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vr.dtype), vr,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return cm.dense(o.reshape(B, C, -1), p.wo), new_cache
+
+
+def paged_decode_attention(
+    p: AttnParams, x: jax.Array, cache: PagedKVCache, *,
+    rope_theta: float = 10000.0, use_rope: bool = True,
+    active: jax.Array | None = None,
+) -> tuple[jax.Array, PagedKVCache]:
+    """One decode step against the block pool; numerics-identical to the
+    contiguous per-slot :func:`decode_attention` (same masked contraction
+    over the same logical positions — the gather only changes *where* the
+    bytes live).
+
+    ``active`` (num_slots,) marks live decode lanes. An inactive lane's
+    write is redirected to the null block — unlike the contiguous layout,
+    a vacant lane's table row may reference blocks the allocator has
+    already handed to another request, so its pad-token write must never
+    reach table-resolved storage. The returned length advances every slot
+    by 1; as with the contiguous path, ``lm.decode_step`` owns the actual
+    advance (masked by ``active``).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    nb, bs, n_kv, hd = cache.k.shape
+    mb = cache.table.shape[1]
+    q = cm.dense(x, p.wq, p.bq).reshape(B, 1, -1, hd)
+    k = cm.dense(x, p.wk, p.bk).reshape(B, 1, n_kv, hd)
+    v = cm.dense(x, p.wv, p.bv).reshape(B, 1, n_kv, hd)
+    pos = cache.length                                     # (B,)
+    if use_rope:
+        sin, cos = cm.rotary_embedding(pos[:, None].astype(jnp.float32),
+                                       hd, rope_theta)
+        q = cm.apply_rotary(q, sin, cos)
+        k = cm.apply_rotary(k, sin, cos)
+    rows = jnp.arange(B)
+    ti = jnp.minimum(pos // bs, mb - 1)
+    blk = cache.table[rows, ti]
+    if active is not None:
+        blk = jnp.where(active.astype(bool), blk, 0)       # null-block spill
+    ck = cache.k.at[blk, pos % bs].set(k[:, 0].astype(cache.k.dtype),
+                                       mode="drop")
+    cv = cache.v.at[blk, pos % bs].set(v[:, 0].astype(cache.v.dtype),
+                                       mode="drop")
+    new_cache = PagedKVCache(k=ck, v=cv, table=cache.table, length=pos + 1)
+    gk = ck[cache.table].reshape(B, mb * bs, n_kv, hd)
+    gv = cv[cache.table].reshape(B, mb * bs, n_kv, hd)
+    n_heads = q.shape[2]
+    scale = hd ** -0.5
+    kr = _repeat_kv(gk, n_heads // n_kv)
+    vr = _repeat_kv(gv, n_heads // n_kv)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", (q * jnp.asarray(scale, q.dtype)).astype(kr.dtype),
+        kr, preferred_element_type=jnp.float32,
+    )
+    kpos = jnp.arange(mb * bs)
+    valid = kpos[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vr.dtype), vr,
+                   preferred_element_type=jnp.float32)
+    out = cm.dense(o.reshape(B, 1, -1).astype(x.dtype), p.wo)
+    return out, new_cache
+
+
 def cross_attention(
     p: AttnParams, x: jax.Array, kv_src: jax.Array, *,
     n_heads: int, n_kv_heads: int, head_dim: int, chunk: int | None = None,

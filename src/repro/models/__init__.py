@@ -53,9 +53,15 @@ def forward(params, batch: dict[str, Any], cfg: ModelConfig, mesh=None):
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      per_slot: bool = False):
+                      per_slot: bool = False, kv_block_size: int | None = None,
+                      num_kv_blocks: int | None = None):
     if cfg.family in _LM_FAMILIES:
-        return lm.init_decode_state(cfg, batch, max_len, per_slot=per_slot)
+        return lm.init_decode_state(cfg, batch, max_len, per_slot=per_slot,
+                                    kv_block_size=kv_block_size,
+                                    num_kv_blocks=num_kv_blocks)
+    if kv_block_size:
+        raise ValueError(
+            f"paged decode state is LM-family only, not {cfg.family!r}")
     if per_slot:
         raise ValueError(
             f"per-slot decode state is LM-family only, not {cfg.family!r}")
@@ -80,6 +86,16 @@ def prefill(params, batch, cfg: ModelConfig, state, mesh=None, last_pos=None):
     raise ValueError(cfg.family)
 
 
+def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, slot, start,
+                  true_len, blocks, mesh=None):
+    if cfg.family not in _LM_FAMILIES:
+        raise ValueError(
+            f"chunked prefill is LM-family only, not {cfg.family!r}")
+    return lm.prefill_chunk(params, tokens, cfg, state, slot=slot,
+                            start=start, true_len=true_len, blocks=blocks,
+                            mesh=mesh)
+
+
 def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
                 active=None):
     if cfg.family in _LM_FAMILIES:
@@ -101,5 +117,5 @@ def param_count(params) -> int:
 
 __all__ = [
     "init", "axes", "forward", "lm_loss", "init_decode_state", "prefill",
-    "decode_step", "param_count",
+    "prefill_chunk", "decode_step", "param_count",
 ]

@@ -353,11 +353,40 @@ def lm_loss(params, hidden, labels, cfg: ModelConfig):
 
 # ---------------------------------------------------------------- decode
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      per_slot: bool = False):
+                      per_slot: bool = False, kv_block_size: int | None = None,
+                      num_kv_blocks: int | None = None):
     """``per_slot=True`` makes the KV length a (batch,) vector — one decode
     position per slot lane, the continuous-batching engine's cache layout
-    (dense/moe only; other families keep their scalar/implicit clocks)."""
+    (dense/moe only; other families keep their scalar/implicit clocks).
+
+    ``kv_block_size`` switches the per-slot cache from contiguous
+    ``(batch, max_len)`` regions to the paged block-pool layout
+    (:class:`repro.layers.attention.PagedKVCache`): ``num_kv_blocks`` pool
+    blocks of ``kv_block_size`` tokens (block 0 reserved as the null
+    block), a ``(batch, ceil(max_len/block))`` block table, and per-slot
+    lengths. Pool capacity then tracks admitted tokens, not
+    ``batch * max_len``."""
     L, d = cfg.n_layers, cfg.d_model
+    if kv_block_size:
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"paged KV needs a KV-cache family, not {cfg.family!r}")
+        if not per_slot:
+            raise ValueError("paged KV is a per-slot (engine) layout")
+        if num_kv_blocks is None or num_kv_blocks < 2:
+            raise ValueError(
+                f"paged KV needs num_kv_blocks >= 2 (block 0 is the null "
+                f"block), got {num_kv_blocks}")
+        max_blocks = -(-max_len // kv_block_size)
+        kv = attn.PagedKVCache(
+            k=jnp.zeros((L, num_kv_blocks, kv_block_size, cfg.n_kv_heads,
+                         cfg.head_dim), cfg.dtype),
+            v=jnp.zeros((L, num_kv_blocks, kv_block_size, cfg.n_kv_heads,
+                         cfg.head_dim), cfg.dtype),
+            table=jnp.zeros((batch, max_blocks), jnp.int32),
+            length=jnp.zeros((batch,), jnp.int32),
+        )
+        return {"kv": kv}
     if cfg.family in ("dense", "moe"):
         kv = attn.KVCache(
             k=jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
@@ -497,6 +526,82 @@ def prefill(params, tokens, cfg: ModelConfig, state, mesh=None,
     return _logits(params, cfg, h_last)[:, 0], new_state
 
 
+def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, slot, start,
+                  true_len, blocks, mesh=None):
+    """One chunked-prefill step into a *paged* decode state.
+
+    ``tokens`` is (1, C): the next chunk of one request's prompt, right-
+    padded to the bucket length C. ``slot`` is the lane the request
+    occupies, ``start`` how many prompt tokens earlier chunks wrote,
+    ``true_len`` how many of this chunk's tokens are real, and ``blocks``
+    the (max_blocks,) int32 block-table row the allocator assigned (null-
+    padded) — installed idempotently on every chunk, so the first chunk
+    binds the lane and later chunks are no-ops on the table.
+
+    Returns (logits (1, Vp) at the chunk's last real token, new state); the
+    engine only samples the logits of a prompt's final chunk. Slot, start
+    and true_len are traced scalars: one compiled program per bucket length
+    serves every admission (the fixed-signature property the plan cache is
+    built around).
+
+    Parity: for the dense family this is bit-exact against whole-prompt
+    prefill (each chunk attends to the identical key set, position for
+    position). For MoE it matches only while expert capacity does not
+    bind: ``moe_ffn`` derives capacity from the tokens in the call, so a
+    chunk's tokens compete for a chunk-sized capacity rather than a
+    prompt-sized one — when routing overflows, chunked and whole-prompt
+    prefill can drop different tokens. Chunk-wise exactness under
+    overflow is structurally impossible (capacity competition is
+    per-call); docs/serving.md states the same caveat for operators.
+    """
+    cm.set_activation_mesh(mesh)
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"chunked prefill needs a KV-cache family, not {cfg.family!r}")
+    kv = state["kv"]
+    if not isinstance(kv, attn.PagedKVCache):
+        raise ValueError("prefill_chunk requires a paged decode state "
+                         "(init_decode_state with kv_block_size)")
+    table = kv.table.at[slot].set(blocks)
+    x = cm.embed_lookup(params["embed"], tokens, mesh).astype(cfg.dtype)
+    C = tokens.shape[1]
+
+    def body(carry, inp):
+        x = carry
+        lp, ck, cv = inp
+        h = apply_norm(cfg, lp["ln1"], x)
+        cache = attn.PagedKVCache(k=ck, v=cv, table=table, length=kv.length)
+        y, nc = attn.paged_prefill_attention(
+            lp["attn"], h, cache, slot=slot, start=start, true_len=true_len,
+            rope_theta=cfg.rope_theta)
+        x = x + y
+        h2 = apply_norm(cfg, lp["ln2"], x)
+        if cfg.family == "moe":
+            # pad positions must not compete for expert capacity
+            y2, _ = moe_lib.moe_ffn(
+                lp["moe"], h2, mesh=mesh, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                activation=cfg.activation,
+                token_mask=(jnp.arange(C) < true_len)[None, :])
+            if cfg.dense_residual:
+                y2 = y2 + mlp_lib.mlp(lp["mlp"], h2,
+                                      activation=cfg.activation)
+        else:
+            y2 = mlp_lib.mlp(lp["mlp"], h2, activation=cfg.activation)
+        return cm.hint(x + y2, "dp", None, "model"), (nc.k, nc.v)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
+    new_len = kv.length.at[slot].set(
+        jnp.asarray(start + true_len, jnp.int32))
+    new_state = {**state, "kv": attn.PagedKVCache(
+        k=nk, v=nv, table=table, length=new_len)}
+    lp = jnp.broadcast_to(
+        jnp.asarray(true_len - 1, jnp.int32), (x.shape[0],))
+    h_last = jnp.take_along_axis(x, lp[:, None, None], axis=1)
+    h_last = apply_norm(cfg, params["final_norm"], h_last)
+    return _logits(params, cfg, h_last)[:, 0], new_state
+
+
 def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
                 active=None):
     """One decode step. tokens (B, 1) -> (logits (B, Vp), new state).
@@ -514,14 +619,22 @@ def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
 
     if cfg.family in ("dense", "moe"):
         kv = state["kv"]
+        paged = isinstance(kv, attn.PagedKVCache)
 
         def body(carry, inp):
             x = carry
             lp, ck, cv = inp
             h = apply_norm(cfg, lp["ln1"], x)
-            cache = attn.KVCache(k=ck, v=cv, length=kv.length)
-            y, nc = attn.decode_attention(
-                lp["attn"], h, cache, rope_theta=cfg.rope_theta)
+            if paged:
+                cache = attn.PagedKVCache(k=ck, v=cv, table=kv.table,
+                                          length=kv.length)
+                y, nc = attn.paged_decode_attention(
+                    lp["attn"], h, cache, rope_theta=cfg.rope_theta,
+                    active=active)
+            else:
+                cache = attn.KVCache(k=ck, v=cv, length=kv.length)
+                y, nc = attn.decode_attention(
+                    lp["attn"], h, cache, rope_theta=cfg.rope_theta)
             x = x + y
             h2 = apply_norm(cfg, lp["ln2"], x)
             if cfg.family == "moe":
@@ -543,7 +656,12 @@ def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
 
         x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
         step = 1 if active is None else active.astype(kv.length.dtype)
-        new_state = {"kv": attn.KVCache(k=nk, v=nv, length=kv.length + step)}
+        if paged:
+            new_state = {"kv": attn.PagedKVCache(
+                k=nk, v=nv, table=kv.table, length=kv.length + step)}
+        else:
+            new_state = {"kv": attn.KVCache(
+                k=nk, v=nv, length=kv.length + step)}
     elif cfg.family == "rwkv":
         def body(carry, inp):
             x = carry

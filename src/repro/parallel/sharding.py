@@ -110,7 +110,7 @@ def batch_specs(batch_shapes: dict, mesh: Mesh) -> dict:
     return jax.tree.map(spec, batch_shapes)
 
 
-def decode_state_specs(state_shapes, cfg, mesh: Mesh):
+def decode_state_specs(state_shapes, cfg, mesh: Mesh, paged: bool = False):
     """Decode-state sharding. KV caches: batch over DP when divisible, else
     the *sequence* dim over 'data' (long_500k: batch=1, 512k cache) — the
     sequence-parallel cache layout; GSPMD then lowers decode attention to the
@@ -123,7 +123,15 @@ def decode_state_specs(state_shapes, cfg, mesh: Mesh):
     lane group; admissions write into one shard's region). The per-slot
     ``length`` vector (B,) is replicated — every host-side admission and
     eviction decision reads it, and at num_slots ints it is never worth
-    scattering."""
+    scattering.
+
+    ``paged=True`` switches the KV rules to the block-pool layout
+    (``PagedKVCache``): k/v are (L, num_blocks, block_size, H, D) — the
+    *block* axis shards over 'data' when divisible (the pool spreads across
+    DP shards; table-directed gathers/scatters cross shards via GSPMD),
+    heads over 'model' with the same GQA head_dim fallback. The block table
+    (num_slots, max_blocks) and length vector are replicated: both are
+    host-decided routing metadata, a few hundred int32s."""
     dp = data_axes(mesh)
     sizes = mesh_axis_sizes(mesh)
     dp_total = int(np.prod([sizes[a] for a in dp])) if dp else 1
@@ -137,6 +145,21 @@ def decode_state_specs(state_shapes, cfg, mesh: Mesh):
             return P()
         if "kv" in keyname and x.ndim == 1:
             return P()  # per-slot length vector: replicated (see above)
+        if paged and "kv" in keyname:
+            if x.ndim == 2:
+                return P()  # block table: replicated routing metadata
+            # (L, num_blocks, block_size, H, D) pool
+            entries = [None] * x.ndim
+            if x.shape[1] % dp_total == 0 and dp_entry is not None:
+                entries[1] = dp_entry
+            if model > 1:
+                if x.shape[3] % model == 0:
+                    entries[3] = "model"
+                elif x.shape[4] % model == 0:
+                    entries[4] = "model"
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
         entries = [None] * x.ndim
         if keyname.split("/")[0] in ("enc", "img"):
             # (B, S, d) context tensors: batch-sharded when divisible

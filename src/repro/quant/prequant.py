@@ -19,9 +19,11 @@ MoE expert tables quantize too: each (E, d, f)/(E, f, d) stack becomes a
 per-expert, per-output-channel ``QuantizedLinear`` that ``moe_ffn`` detects
 and dequantizes on-chip inside the expert einsum — int8 is what streams
 from HBM (the expert tables are the single largest weight traffic term in
-an MoE decode step). Families whose projections live in other containers
-(RWKV time-mix, Mamba) keep float weights — under ``quant_mode='int8'``
-those fall back to the dynamic path, so a model is never half-broken.
+an MoE decode step). RWKV time/channel-mix and Mamba in/out projections
+quantize the same way (their dense() calls dispatch on the leaf type);
+only non-GEMM leaves (LoRA towers, conv/SSM coefficients, norms) stay
+float — under ``quant_mode='int8'`` those few fall back to the dynamic
+path, so a model is never half-broken.
 """
 from __future__ import annotations
 
@@ -30,8 +32,10 @@ from typing import Any
 import jax
 
 from repro.layers.attention import AttnParams
+from repro.layers.mamba import MambaParams
 from repro.layers.mlp import MlpParams
 from repro.layers.moe import MoeParams
+from repro.layers.rwkv import RwkvChannelMixParams, RwkvTimeMixParams
 from repro.quant.int8 import QuantizedLinear, quantize_linear
 
 
@@ -51,16 +55,24 @@ def _axes_for_weight(axes: tuple) -> QuantizedLinear:
 
 
 # Which fields of which containers are GEMM projection weights. Extending
-# pre-quantization to a new container (ROADMAP leftover: RWKV/Mamba) means
-# adding one entry here — params and axes transforms stay in lockstep.
+# pre-quantization to a new container means adding one entry here — params
+# and axes transforms stay in lockstep.
 # MoE expert tables are (E, d, f)/(E, f, d) stacks: the per-layer vmap in
 # _quantize_weight covers the expert dim the same way it covers the layer
 # dim, so each expert gets its own per-output-channel scales; the router
 # stays float (it is a tiny f32 GEMM feeding top-k, not a traffic term).
+# RWKV time-mix quantizes the five (d, d) stream projections and channel-mix
+# its three; the LoRA mix/decay towers stay float (rank-32 side GEMMs, not
+# a traffic term, and their outputs feed exp/tanh where int8 error
+# compounds). Mamba quantizes the in/out projections — conv and SSM
+# coefficients are elementwise state math, not GEMMs.
 _PROJECTION_FIELDS: dict[type, tuple[str, ...]] = {
     AttnParams: ("wq", "wk", "wv", "wo"),
     MlpParams: ("w_in", "w_gate", "w_out"),
     MoeParams: ("w_in", "w_gate", "w_out"),
+    RwkvTimeMixParams: ("wr", "wk", "wv", "wg", "wo"),
+    RwkvChannelMixParams: ("wk", "wv", "wr"),
+    MambaParams: ("w_in", "w_out"),
 }
 
 

@@ -1,0 +1,135 @@
+"""Fixed-size KV block pool: the host-side allocator behind paged KV.
+
+The paged cache (``layers.attention.PagedKVCache``) stores K/V in a flat
+pool of ``num_blocks`` blocks of ``block_size`` tokens each; a request owns
+an ordered list of block ids and the device sees them as one
+``(num_slots, max_blocks)`` block table. This module is the allocator for
+that pool — pure host Python, no jax:
+
+* block 0 is the reserved **null block**: vacant table entries point at it
+  and masked/garbage writes land in it, so a freed block can be reused by
+  the next request without any device-side scrubbing;
+* ``alloc(n)`` pops ``n`` blocks off a free list (lowest ids first, so
+  reuse is deterministic for tests) or returns ``None`` — the scheduler
+  then simply leaves the request queued and retries next tick;
+* ``free`` returns a request's blocks at eviction;
+* counters track peak occupancy and internal fragmentation (tokens of
+  allocated-but-unwritten capacity), the paper's compute/memory-balance
+  bookkeeping applied to cache capacity instead of GEMM tiles.
+
+Capacity is therefore proportional to *admitted* tokens, not to
+``num_slots * max_len`` — the contiguous layout this replaces.
+"""
+from __future__ import annotations
+
+import heapq
+
+NULL_BLOCK = 0
+
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``tokens`` tokens (ceil division)."""
+    if tokens <= 0:
+        return 0
+    return -(-tokens // block_size)
+
+
+class BlockPool:
+    """Free-list allocator over ``num_blocks`` blocks of ``block_size``
+    tokens. Block 0 (the null block) is never handed out."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"num_blocks must be >= 2 (block 0 is the reserved null "
+                f"block), got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(1, num_blocks))  # heap, block 0 out
+        heapq.heapify(self._free)
+        self._in_use = 0
+        self.peak_in_use = 0
+        self.allocs = 0
+        self.frees = 0
+        self.failed_allocs = 0
+
+    # ------------------------------------------------------------ capacity
+    @property
+    def usable_blocks(self) -> int:
+        """Blocks a request can ever own (everything but the null block)."""
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self._in_use
+
+    def capacity_tokens(self) -> int:
+        return self.usable_blocks * self.block_size
+
+    def blocks_for(self, tokens: int) -> int:
+        return blocks_for(tokens, self.block_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def fits_ever(self, tokens: int) -> bool:
+        """Whether a request needing ``tokens`` tokens could be admitted
+        into an *empty* pool — False means submit must hard-refuse."""
+        return self.blocks_for(tokens) <= self.usable_blocks
+
+    # ------------------------------------------------------------ alloc/free
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` blocks (lowest ids first); ``None`` if the free list is
+        short — the caller defers admission rather than fragmenting."""
+        if n < 0:
+            raise ValueError(f"alloc of {n} blocks")
+        if n > len(self._free):
+            self.failed_allocs += 1
+            return None
+        out = [heapq.heappop(self._free) for _ in range(n)]
+        self._in_use += n
+        self.allocs += 1
+        self.peak_in_use = max(self.peak_in_use, self._in_use)
+        return out
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if not (0 < b < self.num_blocks):
+                raise ValueError(f"free of invalid block id {b}")
+            heapq.heappush(self._free, b)
+        self._in_use -= len(blocks)
+        if self._in_use < 0:
+            raise ValueError("double free: more blocks freed than allocated")
+        if blocks:
+            self.frees += 1
+
+    # ------------------------------------------------------------ accounting
+    def fragmentation_tokens(self, live_tokens: int) -> int:
+        """Internal fragmentation right now: allocated capacity minus the
+        tokens actually written into it (rounded-up tails + reserved-but-
+        unreached generation budget)."""
+        return self._in_use * self.block_size - live_tokens
+
+    def utilization(self) -> float:
+        """Peak fraction of the pool ever in use."""
+        return (self.peak_in_use / self.usable_blocks
+                if self.usable_blocks else 0.0)
+
+    def stats(self) -> dict:
+        return {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "blocks_in_use": self._in_use,
+            "free_blocks": len(self._free),
+            "peak_in_use": self.peak_in_use,
+            "peak_utilization": self.utilization(),
+            "allocs": self.allocs,
+            "frees": self.frees,
+            "failed_allocs": self.failed_allocs,
+        }

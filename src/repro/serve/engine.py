@@ -6,17 +6,27 @@ compiled step functions (device-side, fixed shapes):
 * every tick runs ONE masked decode step for all ``num_slots`` lanes —
   vacant lanes are fed the pad token and excluded from sampling, and their
   cache position does not advance;
-* admissions interleave between ticks: a single-request prefill (prompt
-  right-padded to one fixed ``prompt_pad``) writes its KV into the assigned
-  slot's cache region and yields the request's first token;
-* eviction on stop-id / max-new-tokens frees the lane for the queue head.
+* admissions interleave between ticks. On the contiguous layout a
+  single-request prefill (prompt right-padded to one fixed ``prompt_pad``)
+  writes the slot's cache region in one shot. On the **paged** layout
+  (``kv_block_size``) admission only binds a lane and allocates KV blocks;
+  the prompt then prefills chunk by chunk — at most one bucket-padded
+  chunk per tick — interleaved with decode, so a long admit never stalls
+  the running batch;
+* eviction on stop-id / max-new-tokens frees the lane (and, paged, returns
+  the request's blocks to the pool) for the queue head.
 
-Because slot count, prompt_pad, max_len and model dims are all fixed at
+Because slot count, chunk buckets, max_len and model dims are all fixed at
 engine build, every tick issues the identical GEMM signature set. The
-engine warms the plan cache by abstractly tracing its own two step
-functions (``plan_warmup``), then *asserts* the serving loop performs zero
-lazy plan solves (``PlanCache.expect_steady_state``) — the steady state the
+engine warms the plan cache by abstractly tracing its own step functions
+(``plan_warmup``), then *asserts* the serving loop performs zero lazy plan
+solves (``PlanCache.expect_steady_state``) — the steady state the
 GemmContext/PlanCache subsystem exists to provide.
+
+Sampling is host-side and per-request: greedy at ``temperature=0``
+(default), else temperature + top-p nucleus sampling from a per-request
+seeded stream — the device step functions never see randomness, so the
+fixed-signature property is untouched.
 """
 from __future__ import annotations
 
@@ -30,10 +40,21 @@ import numpy as np
 from repro import models
 from repro.configs.base import ModelConfig
 from repro.core.context import current_context
+from repro.serve.blockpool import BlockPool
 from repro.serve.metrics import EngineMetrics
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
-from repro.train.servestep import make_engine_step
+from repro.train.servestep import make_engine_step, make_paged_engine_step
+
+
+def chunk_buckets(chunk: int) -> tuple[int, ...]:
+    """Bucket lengths chunked prefill pads to: {chunk/4, chunk/2, chunk}.
+
+    Full chunks use the largest bucket; a prompt's tail rounds up to the
+    smallest covering bucket — so prefill issues at most 3 distinct GEMM
+    signatures instead of one per prompt length.
+    """
+    return tuple(sorted({max(1, chunk // 4), max(1, chunk // 2), chunk}))
 
 
 class ServeEngine:
@@ -48,6 +69,12 @@ class ServeEngine:
         prompt_pad: int,
         pad_id: int = 0,
         param_axes=None,
+        kv_block_size: int | None = None,
+        num_kv_blocks: int | None = None,
+        prefill_chunk: int | None = None,
+        temperature: float = 0.0,
+        top_p: float = 1.0,
+        seed: int = 0,
     ):
         self.cfg = cfg
         self.mesh = mesh
@@ -56,16 +83,45 @@ class ServeEngine:
         self.max_len = max_len
         self.prompt_pad = prompt_pad
         self.pad_id = pad_id
-        self.art = make_engine_step(
-            cfg, mesh, num_slots=num_slots, max_len=max_len,
-            prompt_pad=prompt_pad,
-            param_shapes=(None if param_axes is None
-                          else jax.eval_shape(lambda: params)),
-            param_axes=param_axes)
-        self._init_fn = jax.jit(
-            lambda: models.init_decode_state(cfg, num_slots, max_len,
-                                             per_slot=True),
-            out_shardings=self.art.state_shardings)
+        self.temperature = temperature
+        self.top_p = top_p
+        self.seed = seed
+        self.paged = bool(kv_block_size)
+        param_shapes = (None if param_axes is None
+                        else jax.eval_shape(lambda: params))
+        if self.paged:
+            self.kv_block_size = int(kv_block_size)
+            # default pool: full contiguous capacity (+ the null block) —
+            # shrink num_kv_blocks to make footprint track admitted tokens
+            full = -(-num_slots * max_len // self.kv_block_size) + 1
+            self.num_kv_blocks = int(num_kv_blocks or full)
+            self.prefill_chunk = int(prefill_chunk or prompt_pad)
+            self.chunk_buckets = chunk_buckets(self.prefill_chunk)
+            self.art = make_paged_engine_step(
+                cfg, mesh, num_slots=num_slots, max_len=max_len,
+                kv_block_size=self.kv_block_size,
+                num_kv_blocks=self.num_kv_blocks,
+                chunk_buckets=self.chunk_buckets,
+                param_shapes=param_shapes, param_axes=param_axes)
+            self._init_fn = jax.jit(
+                lambda: models.init_decode_state(
+                    cfg, num_slots, max_len, per_slot=True,
+                    kv_block_size=self.kv_block_size,
+                    num_kv_blocks=self.num_kv_blocks),
+                out_shardings=self.art.state_shardings)
+        else:
+            self.kv_block_size = None
+            self.num_kv_blocks = None
+            self.prefill_chunk = None
+            self.chunk_buckets = None
+            self.art = make_engine_step(
+                cfg, mesh, num_slots=num_slots, max_len=max_len,
+                prompt_pad=prompt_pad,
+                param_shapes=param_shapes, param_axes=param_axes)
+            self._init_fn = jax.jit(
+                lambda: models.init_decode_state(cfg, num_slots, max_len,
+                                                 per_slot=True),
+                out_shardings=self.art.state_shardings)
         self._warmed = False
         self.reset()
 
@@ -76,9 +132,12 @@ class ServeEngine:
         ctx = current_context()
         with self.mesh:
             self.state = self._init_fn()
-        self.sched = SlotScheduler(self.num_slots, max_len=self.max_len)
+        pool = (BlockPool(self.num_kv_blocks, self.kv_block_size)
+                if self.paged else None)
+        self.sched = SlotScheduler(self.num_slots, max_len=self.max_len,
+                                   pool=pool)
         self._next_tok = np.full((self.num_slots,), self.pad_id, np.int64)
-        self.metrics = EngineMetrics(engine={
+        engine_info = {
             "arch": self.cfg.name,
             "num_slots": self.num_slots,
             "max_len": self.max_len,
@@ -86,24 +145,44 @@ class ServeEngine:
             "hw": ctx.hw.name,
             "backend": ctx.matmul_backend,
             "quant": ctx.quant_mode,
-        })
+            "paged": self.paged,
+            "temperature": self.temperature,
+            "top_p": self.top_p,
+        }
+        if self.paged:
+            engine_info.update(
+                kv_block_size=self.kv_block_size,
+                num_kv_blocks=self.num_kv_blocks,
+                prefill_chunk=self.prefill_chunk,
+                chunk_buckets=list(self.chunk_buckets))
+        self.metrics = EngineMetrics(engine=engine_info)
 
     # ------------------------------------------------------------ warm-up
     def plan_warmup(self) -> dict[str, int]:
-        """Pre-solve every GEMM signature the engine's two compiled step
-        functions issue (admission prefill + masked decode) by abstractly
-        tracing them — the engine-shaped analogue of ``core.gemm.plan_model``.
+        """Pre-solve every GEMM signature the engine's compiled step
+        functions issue by abstractly tracing them — the engine-shaped
+        analogue of ``core.gemm.plan_model``. The paged engine traces one
+        chunked-prefill signature per bucket (<= 3) plus the decode tick.
         Marks the engine warm: subsequent ``run`` calls assert steady state.
         """
         cache = current_context().plan_cache
         before = cache.stats.snapshot()
-        prompt = jax.ShapeDtypeStruct((1, self.prompt_pad), jnp.int32)
         scalar = jax.ShapeDtypeStruct((), jnp.int32)
         toks = jax.ShapeDtypeStruct((self.num_slots, 1), jnp.int32)
         active = jax.ShapeDtypeStruct((self.num_slots,), jnp.int32)
         with cache.warmup():
-            jax.eval_shape(self.art.admit_raw, self.params,
-                           self.art.state_shapes, prompt, scalar, scalar)
+            if self.paged:
+                blocks = jax.ShapeDtypeStruct((self.art.max_blocks,),
+                                              jnp.int32)
+                for bucket in self.chunk_buckets:
+                    chunk = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
+                    jax.eval_shape(self.art.prefill_raw, self.params,
+                                   self.art.state_shapes, chunk, scalar,
+                                   scalar, scalar, blocks)
+            else:
+                prompt = jax.ShapeDtypeStruct((1, self.prompt_pad), jnp.int32)
+                jax.eval_shape(self.art.admit_raw, self.params,
+                               self.art.state_shapes, prompt, scalar, scalar)
             jax.eval_shape(self.art.decode_raw, self.params,
                            self.art.state_shapes, toks, active)
         self._warmed = True
@@ -114,30 +193,70 @@ class ServeEngine:
 
     # ------------------------------------------------------------ intake
     def submit(self, request: Request) -> Request:
-        if request.prompt_len > self.prompt_pad:
+        if not self.paged and request.prompt_len > self.prompt_pad:
             raise ValueError(
                 f"prompt_len={request.prompt_len} exceeds the engine's "
                 f"prompt_pad={self.prompt_pad}")
         return self.sched.submit(request)
 
-    # ------------------------------------------------------------ ticking
-    def _sample(self, logits: np.ndarray) -> np.ndarray:
-        """Greedy over the real vocab (the padded tail is never sampled)."""
-        return np.argmax(logits[..., : self.cfg.vocab_size], axis=-1)
+    # ------------------------------------------------------------ sampling
+    def _sample(self, logits_row: np.ndarray, st: RequestState) -> int:
+        """Sample one token for ``st`` from its lane's logits (host-side;
+        the padded vocab tail is never sampled). Greedy at temperature 0,
+        else temperature + top-p nucleus sampling from the request's seeded
+        stream."""
+        req = st.request
+        logits = np.asarray(logits_row[: self.cfg.vocab_size], np.float64)
+        temp = (req.temperature if req.temperature is not None
+                else self.temperature)
+        if temp is None or temp <= 0.0:
+            return int(np.argmax(logits))
+        top_p = req.top_p if req.top_p is not None else self.top_p
+        z = logits / temp
+        z -= z.max()
+        probs = np.exp(z)
+        probs /= probs.sum()
+        if top_p < 1.0:
+            order = np.argsort(-probs, kind="stable")
+            csum = np.cumsum(probs[order])
+            # smallest prefix with mass >= top_p (the boundary token stays)
+            cut = int(np.searchsorted(csum, top_p)) + 1
+            keep = order[:cut]
+            mask = np.zeros_like(probs)
+            mask[keep] = probs[keep]
+            probs = mask / mask.sum()
+        if st.rng is None:
+            st.rng = np.random.default_rng(
+                req.seed if req.seed is not None
+                else [self.seed, st.admission_index])
+        return int(st.rng.choice(probs.shape[0], p=probs))
 
+    # ------------------------------------------------------------ ticking
     def _finish(self, st: RequestState, reason: str, now: float) -> None:
         self.sched.evict(st.slot, reason, now)
         self.metrics.record_request(st)
 
     def _budget(self, st: RequestState) -> int:
-        """Effective generation budget: the request's ask, clamped to the
-        slot's cache headroom (prompt + generated KV must fit max_len)."""
-        return min(st.request.max_new_tokens,
-                   self.max_len - st.request.prompt_len)
+        """Effective generation budget (``Request.budget`` — shared with
+        the scheduler's block-allocation sizing, so the engine can never
+        decode past the blocks a paged request owns)."""
+        return st.request.budget(self.max_len)
+
+    def _first_token(self, st: RequestState, logits: np.ndarray,
+                     now: float) -> None:
+        """Record the first token falling out of a completed prefill."""
+        tok = self._sample(logits, st)
+        st.append(tok, now)
+        self._next_tok[st.slot] = tok
+        reason = ("length" if len(st.tokens) >= self._budget(st)
+                  else st.should_stop())
+        if reason:
+            self._finish(st, reason, now)
 
     def _admit_all(self, now: float) -> int:
-        """Drain the queue into free lanes; each admission prefills and
-        yields the request's first token. Returns admissions performed."""
+        """Contiguous path: drain the queue into free lanes; each admission
+        prefills in one shot and yields the request's first token. Returns
+        tokens produced."""
         n = 0
         while True:
             st = self.sched.admit_next(now)
@@ -151,33 +270,75 @@ class ServeEngine:
                 self.params, self.state, jnp.asarray(prompt),
                 jnp.asarray(st.slot, jnp.int32),
                 jnp.asarray(req.prompt_len, jnp.int32))
-            tok = int(self._sample(np.asarray(logits)))
-            now = time.perf_counter()
-            st.append(tok, now)
-            self._next_tok[st.slot] = tok
-            reason = ("length" if len(st.tokens) >= self._budget(st)
-                      else st.should_stop())
-            if reason:
-                self._finish(st, reason, now)
+            self._first_token(st, np.asarray(logits), time.perf_counter())
+
+    def _bind_admissions(self, now: float) -> int:
+        """Paged path: bind queue heads to free lanes + allocate their KV
+        blocks. No device work — prompts prefill chunk by chunk over the
+        following ticks."""
+        n = 0
+        while self.sched.admit_next(now) is not None:
+            n += 1
+        return n
+
+    def _chunk_shape(self, remaining: int) -> tuple[int, int]:
+        """(bucket_len, true_len) for the next prefill chunk."""
+        if remaining >= self.prefill_chunk:
+            return self.prefill_chunk, self.prefill_chunk
+        for b in self.chunk_buckets:
+            if b >= remaining:
+                return b, remaining
+        return self.prefill_chunk, remaining  # unreachable; buckets cover it
+
+    def _prefill_tick(self, now: float) -> int:
+        """Run ONE chunked-prefill step for the oldest mid-prefill lane.
+        The final chunk yields the request's first token. Returns tokens
+        produced (0 or 1)."""
+        st = self.sched.prefill_head()
+        if st is None:
+            return 0
+        req = st.request
+        start = st.prefill_done
+        bucket, n = self._chunk_shape(req.prompt_len - start)
+        chunk = np.full((1, bucket), self.pad_id, np.int32)
+        chunk[0, :n] = req.prompt[start: start + n]
+        blocks = np.zeros((self.art.max_blocks,), np.int32)
+        blocks[: len(st.blocks)] = st.blocks
+        logits, self.state = self.art.prefill_fn(
+            self.params, self.state, jnp.asarray(chunk),
+            jnp.asarray(st.slot, jnp.int32),
+            jnp.asarray(start, jnp.int32),
+            jnp.asarray(n, jnp.int32),
+            jnp.asarray(blocks))
+        self.sched.prefill_advance(st.slot, n)
+        if st.prefilling:
+            return 0
+        self._first_token(st, np.asarray(logits), time.perf_counter())
+        return 1
 
     def tick(self) -> int:
-        """One engine tick: admissions, then one masked decode step for the
-        occupied lanes. Returns the number of tokens generated."""
+        """One engine tick: admissions (plus, paged, at most one prefill
+        chunk), then one masked decode step for the decode-ready lanes.
+        Returns the number of tokens generated."""
         now = time.perf_counter()
-        produced = self._admit_all(now)
-        mask = self.sched.active_mask()
-        occupied = int(mask.sum())
-        if occupied:
+        if self.paged:
+            self._bind_admissions(now)
+            produced = self._prefill_tick(now)
+        else:
+            produced = self._admit_all(now)
+        mask = self.sched.decode_mask()
+        ready = int(mask.sum())
+        if ready:
             toks = np.where(mask, self._next_tok, self.pad_id)
             logits, self.state = self.art.decode_fn(
                 self.params, self.state,
                 jnp.asarray(toks[:, None], jnp.int32),
                 jnp.asarray(mask, jnp.int32))
-            sampled = self._sample(np.asarray(logits))
+            np_logits = np.asarray(logits)
             now = time.perf_counter()
             for slot in np.flatnonzero(mask):
                 st = self.sched.slots[slot]
-                tok = int(sampled[slot])
+                tok = self._sample(np_logits[slot], st)
                 st.append(tok, now)
                 self._next_tok[slot] = tok
                 produced += 1
@@ -185,7 +346,15 @@ class ServeEngine:
                           else st.should_stop())
                 if reason:
                     self._finish(st, reason, now)
-        self.metrics.record_tick(occupied, produced, self.sched.pending)
+        if self.paged:
+            self.metrics.record_block_pool(
+                self.sched.pool, self.sched.live_tokens(),
+                contiguous_tokens=self.num_slots * self.max_len)
+        # occupancy counts lanes that *decoded* this tick (token-steps
+        # computed), matching the pre-paging engine and the benchmark's
+        # computed_token_steps; mid-prefill lanes are visible separately
+        # via deferred/prefill metrics
+        self.metrics.record_tick(ready, produced, self.sched.pending)
         self.sched.tick += 1
         return produced
 
@@ -211,6 +380,7 @@ class ServeEngine:
         counters = self.sched.counters()
         self.metrics.admissions = counters["admissions"]
         self.metrics.evictions = counters["evictions"]
+        self.metrics.deferred_admissions = counters["deferred_admissions"]
         return self.metrics
 
     @property

@@ -5,15 +5,24 @@ Schema (``EngineMetrics.to_dict``, documented in docs/serving.md):
 
 ```
 {
-  "engine": {num_slots, max_len, prompt_pad, arch, hw, backend, quant},
+  "engine": {num_slots, max_len, prompt_pad, arch, hw, backend, quant,
+             paged, temperature, top_p,
+             [kv_block_size, num_kv_blocks, prefill_chunk, chunk_buckets]},
   "aggregate": {wall_s, ticks, generated_tokens, tokens_per_sec,
-                mean_occupancy, admissions, evictions{reason: n},
-                queue_peak},
+                mean_occupancy, admissions, deferred_admissions,
+                evictions{reason: n}, queue_peak},
   "requests": [{request_id, prompt_len, tokens, ttft_s, total_s,
                 per_token_s, finish_reason, admitted_tick, finished_tick}],
+  "block_pool": {num_blocks, block_size, peak_in_use, peak_utilization,
+                 peak_fragmentation_tokens, pool_tokens, contiguous_tokens,
+                 memory_ratio, allocs, frees, failed_allocs},   # paged only
   "plan_cache": {hits, misses, lazy_solves, warm_solves, steady_state}
 }
 ```
+
+``memory_ratio`` is the paged pool's whole-cache token capacity over the
+contiguous layout's ``num_slots * max_len`` — the footprint the block-table
+refactor exists to shrink (the benchmark asserts <= 0.5x).
 
 TTFT here is admission-to-first-token (the first token falls out of the
 admission prefill itself); queueing delay is visible separately as
@@ -38,8 +47,10 @@ class EngineMetrics:
     occupancy_sum: int = 0        # sum over ticks of occupied slots
     queue_peak: int = 0
     admissions: int = 0
+    deferred_admissions: int = 0
     evictions: dict[str, int] = dataclasses.field(default_factory=dict)
     requests: list[dict[str, Any]] = dataclasses.field(default_factory=list)
+    block_pool: dict[str, Any] = dataclasses.field(default_factory=dict)
     plan_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------ record
@@ -68,6 +79,21 @@ class EngineMetrics:
             "admitted_tick": st.admitted_tick,
             "finished_tick": st.finished_tick,
         })
+
+    def record_block_pool(self, pool, live_tokens: int, *,
+                          contiguous_tokens: int) -> None:
+        """Fold the allocator's current state into the running block-pool
+        section (peaks are monotone; called every tick, cheap dict math)."""
+        stats = pool.stats()
+        frag = pool.fragmentation_tokens(live_tokens)
+        prev = self.block_pool
+        stats["peak_fragmentation_tokens"] = max(
+            frag, prev.get("peak_fragmentation_tokens", 0))
+        stats["pool_tokens"] = pool.num_blocks * pool.block_size
+        stats["contiguous_tokens"] = contiguous_tokens
+        stats["memory_ratio"] = (stats["pool_tokens"] / contiguous_tokens
+                                 if contiguous_tokens else 0.0)
+        self.block_pool = stats
 
     def record_plan_cache(self, before: PlanCacheStats,
                           after: PlanCacheStats) -> None:
@@ -100,10 +126,12 @@ class EngineMetrics:
                 "tokens_per_sec": self.tokens_per_sec,
                 "mean_occupancy": self.mean_occupancy,
                 "admissions": self.admissions,
+                "deferred_admissions": self.deferred_admissions,
                 "evictions": dict(self.evictions),
                 "queue_peak": self.queue_peak,
             },
             "requests": list(self.requests),
+            "block_pool": dict(self.block_pool),
             "plan_cache": dict(self.plan_cache),
         }
 

@@ -26,11 +26,20 @@ class Request:
     generation; any token in ``stop_ids`` ends it early (the stop token is
     kept in the output, vLLM-style). ``arrival_tick`` is stamped by the
     scheduler at submit time.
+
+    Sampling: ``temperature``/``top_p`` override the engine-level defaults
+    when set (``temperature=0`` is greedy); ``seed`` pins the request's
+    sampling stream — unset, the engine derives one from its own seed and
+    the request's admission index, so a fixed trace replays token-for-token
+    either way.
     """
 
     prompt: np.ndarray
     max_new_tokens: int
     stop_ids: tuple[int, ...] = ()
+    temperature: float | None = None
+    top_p: float | None = None
+    seed: int | None = None
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     arrival_tick: int = -1
 
@@ -46,10 +55,26 @@ class Request:
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
 
+    def budget(self, max_len: int) -> int:
+        """Effective generation budget against a ``max_len`` cache: the
+        request's ask clamped to its decode headroom. The single source of
+        truth — the scheduler sizes the request's KV block allocation from
+        it and the engine stops decoding at it, so an admitted request can
+        never write past the blocks it owns."""
+        return min(self.max_new_tokens, max_len - self.prompt_len)
+
 
 @dataclasses.dataclass
 class RequestState:
-    """Engine-side state of an admitted (or finished) request."""
+    """Engine-side state of an admitted (or finished) request.
+
+    Paged-engine extras: ``blocks`` is the ordered list of KV pool blocks
+    the allocator assigned at admission (freed at eviction);
+    ``prefill_done`` counts prompt tokens already written by chunked
+    prefill — the lane joins the decode mask once it reaches
+    ``prompt_len``. ``rng`` is the per-request sampling stream (host
+    numpy; the device never sees randomness).
+    """
 
     request: Request
     slot: int                      # decode lane while active, last lane after
@@ -60,10 +85,20 @@ class RequestState:
     finished_s: float | None = None
     finished_tick: int | None = None
     finish_reason: str | None = None     # 'stop' | 'length' | None (active)
+    blocks: list[int] | None = None      # paged KV pool blocks (in order)
+    prefill_done: int = 0                # prompt tokens written so far
+    admission_index: int = -1            # nth admission of this engine run
+    rng: np.random.Generator | None = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def done(self) -> bool:
         return self.finish_reason is not None
+
+    @property
+    def prefilling(self) -> bool:
+        return (self.finish_reason is None
+                and self.prefill_done < self.request.prompt_len)
 
     def append(self, token: int, now_s: float) -> None:
         if self.first_token_s is None:

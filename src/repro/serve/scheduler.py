@@ -5,12 +5,21 @@ scheduler's whole job is to keep that shape true while requests come and go:
 
 * ``submit`` appends to a FIFO queue (arrival order is admission order);
 * ``admit_next`` binds the queue head to the lowest free slot — the engine
-  then runs the single-request prefill that writes the slot's KV region;
+  then prefills the slot's KV (one shot on the contiguous layout, chunk by
+  chunk on the paged one);
 * ``evict`` frees a slot on EOS / max-length so the next queued request can
   reuse the lane (same buffer, new length — no allocation);
-* ``active_mask`` is the (num_slots,) occupancy the masked decode consumes.
+* ``active_mask`` is the (num_slots,) occupancy; ``decode_mask`` excludes
+  lanes whose prompt is still mid-chunked-prefill.
 
-Pure host-side Python: no jax imports, trivially unit-testable.
+With a :class:`repro.serve.blockpool.BlockPool` attached, admission also
+allocates the request's KV blocks — the whole prompt *plus* its effective
+generation budget, so a request admitted can always run to completion
+(no mid-flight preemption). When the free list is short the queue head
+simply waits (``deferred_admissions`` counts the stalls); a request whose
+prompt + budget could never fit even an empty pool is refused at submit.
+
+Pure host-side Python (numpy only), trivially unit-testable.
 """
 from __future__ import annotations
 
@@ -18,21 +27,26 @@ import collections
 
 import numpy as np
 
+from repro.serve.blockpool import BlockPool
 from repro.serve.request import Request, RequestState
 
 
 class SlotScheduler:
-    def __init__(self, num_slots: int, *, max_len: int):
+    def __init__(self, num_slots: int, *, max_len: int,
+                 pool: BlockPool | None = None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         self.num_slots = num_slots
         self.max_len = max_len
+        self.pool = pool
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[RequestState | None] = [None] * num_slots
         self.tick = 0
         self.finished: list[RequestState] = []
         self._admissions = 0
+        self._deferred = 0
         self._evictions: dict[str, int] = {}
+        self._prefill_order: list[int] = []   # slots mid-chunked-prefill
 
     # ------------------------------------------------------------ queue
     def submit(self, request: Request) -> Request:
@@ -40,6 +54,15 @@ class SlotScheduler:
             raise ValueError(
                 f"prompt_len={request.prompt_len} does not fit max_len="
                 f"{self.max_len} (need >= 1 token of decode headroom)")
+        if self.pool is not None:
+            need = self.pool.blocks_for(
+                request.prompt_len + request.budget(self.max_len))
+            if need > self.pool.usable_blocks:
+                raise ValueError(
+                    f"prompt+budget needs {need} KV blocks but the pool has "
+                    f"{self.pool.usable_blocks} usable "
+                    f"({self.pool.capacity_tokens()} tokens) — the request "
+                    f"could never be admitted")
         request.arrival_tick = self.tick
         self.queue.append(request)
         return request
@@ -55,6 +78,13 @@ class SlotScheduler:
     def active_mask(self) -> np.ndarray:
         return np.array([s is not None for s in self.slots], bool)
 
+    def decode_mask(self) -> np.ndarray:
+        """Lanes ready for the masked decode step: occupied AND past
+        prefill (on the contiguous layout admission prefill is one shot,
+        so every occupied lane qualifies)."""
+        return np.array(
+            [s is not None and not s.prefilling for s in self.slots], bool)
+
     def occupancy(self) -> int:
         return sum(s is not None for s in self.slots)
 
@@ -63,17 +93,53 @@ class SlotScheduler:
         return not self.queue and self.occupancy() == 0
 
     def admit_next(self, now_s: float = 0.0) -> RequestState | None:
-        """Bind the FIFO head to the lowest free slot; None if queue empty
-        or every lane is occupied."""
+        """Bind the FIFO head to the lowest free slot; None if the queue is
+        empty, every lane is occupied, or (paged) the pool cannot cover the
+        head's prompt + budget right now — the head stays queued and the
+        stall is counted."""
         free = self.free_slots()
         if not free or not self.queue:
             return None
-        req = self.queue.popleft()
+        req = self.queue[0]
+        blocks = None
+        if self.pool is not None:
+            need = self.pool.blocks_for(
+                req.prompt_len + req.budget(self.max_len))
+            blocks = self.pool.alloc(need)
+            if blocks is None:
+                self._deferred += 1
+                return None
+        self.queue.popleft()
         st = RequestState(
             request=req, slot=free[0], admitted_tick=self.tick,
-            admitted_s=now_s)
+            admitted_s=now_s, blocks=blocks,
+            admission_index=self._admissions)
         self.slots[free[0]] = st
         self._admissions += 1
+        if self.pool is not None:
+            self._prefill_order.append(free[0])
+        else:
+            st.prefill_done = req.prompt_len   # one-shot admission prefill
+        return st
+
+    # ---------------------------------------------------- chunked prefill
+    def prefill_head(self) -> RequestState | None:
+        """The oldest lane still mid-prefill (admission order)."""
+        while self._prefill_order:
+            st = self.slots[self._prefill_order[0]]
+            if st is not None and st.prefilling:
+                return st
+            self._prefill_order.pop(0)
+        return None
+
+    def prefill_advance(self, slot: int, n_tokens: int) -> RequestState:
+        st = self.slots[slot]
+        if st is None:
+            raise ValueError(f"prefill_advance on vacant slot {slot}")
+        st.prefill_done += n_tokens
+        if not st.prefilling and self._prefill_order and \
+                self._prefill_order[0] == slot:
+            self._prefill_order.pop(0)
         return st
 
     def evict(self, slot: int, reason: str, now_s: float = 0.0) -> RequestState:
@@ -86,14 +152,28 @@ class SlotScheduler:
         self.slots[slot] = None
         self.finished.append(st)
         self._evictions[reason] = self._evictions.get(reason, 0) + 1
+        if self.pool is not None and st.blocks:
+            self.pool.free(st.blocks)
+        if slot in self._prefill_order:
+            self._prefill_order.remove(slot)
         return st
 
     # ------------------------------------------------------------ stats
+    def live_tokens(self) -> int:
+        """Tokens currently written into occupied lanes' caches."""
+        return sum(
+            s.prefill_done + len(s.tokens)
+            for s in self.slots if s is not None)
+
     def counters(self) -> dict:
-        return {
+        out = {
             "admissions": self._admissions,
+            "deferred_admissions": self._deferred,
             "evictions": dict(self._evictions),
             "pending": self.pending,
             "occupied": self.occupancy(),
             "ticks": self.tick,
         }
+        if self.pool is not None:
+            out["block_pool"] = self.pool.stats()
+        return out

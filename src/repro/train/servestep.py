@@ -183,6 +183,110 @@ def make_engine_step(
     )
 
 
+@dataclasses.dataclass
+class PagedEngineArtifacts:
+    """Compiled step functions for the *paged* serving engine.
+
+    ``decode_fn(params, state, tokens, active)`` — one masked decode tick
+    against the block pool. ``prefill_fn(params, state, chunk, slot, start,
+    true_len, blocks)`` — one chunked-prefill step; the chunk is padded to
+    one of ``chunk_buckets``, so jit specializes to at most
+    ``len(chunk_buckets)`` programs and steady-state prefill issues a
+    closed GEMM-signature set. Raw callables are kept for plan warm-up.
+    """
+
+    decode_fn: Callable
+    prefill_fn: Callable
+    decode_raw: Callable
+    prefill_raw: Callable
+    param_shardings: Any
+    state_shardings: Any
+    state_shapes: Any
+    chunk_buckets: tuple[int, ...]
+    max_blocks: int
+
+
+def make_paged_engine_step(
+    cfg: ModelConfig, mesh: Mesh, *, num_slots: int, max_len: int,
+    kv_block_size: int, num_kv_blocks: int,
+    chunk_buckets: tuple[int, ...], param_shapes=None, param_axes=None,
+) -> PagedEngineArtifacts:
+    """Step factory for the paged (block-table) serving engine.
+
+    Differences from :func:`make_engine_step`: the cache is a
+    ``PagedKVCache`` pool of ``num_kv_blocks`` × ``kv_block_size`` tokens
+    (block 0 reserved), and admission prefill is *chunked* — each call
+    writes one bucket-padded chunk of one request's prompt through the
+    block table, so long prompts amortize over ticks instead of stalling
+    the decode batch. Slot, chunk start, true length and the block-table
+    row are all traced — admissions and chunk progress never recompile.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"the paged engine needs a KV-cache family (dense/moe), "
+            f"got {cfg.family!r}")
+    if kv_block_size < 1:
+        raise ValueError(f"kv_block_size must be >= 1, got {kv_block_size}")
+    if num_kv_blocks < 2:
+        raise ValueError(
+            f"num_kv_blocks must be >= 2 (block 0 is the reserved null "
+            f"block), got {num_kv_blocks}")
+    buckets = tuple(sorted(set(int(b) for b in chunk_buckets)))
+    if not buckets or buckets[0] < 1:
+        raise ValueError(f"bad chunk_buckets {chunk_buckets!r}")
+    if buckets[-1] >= max_len:
+        raise ValueError(
+            f"largest chunk bucket ({buckets[-1]}) must be < max_len "
+            f"({max_len})")
+    axes = param_axes if param_axes is not None else models.axes(cfg)
+    if param_shapes is None:
+        param_shapes = jax.eval_shape(
+            lambda: models.init(jax.random.PRNGKey(0), cfg))
+    pshard = shd.param_shardings(axes, param_shapes, mesh)
+    state_shapes = jax.eval_shape(
+        lambda: models.init_decode_state(
+            cfg, num_slots, max_len, per_slot=True,
+            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks))
+    max_blocks = state_shapes["kv"].table.shape[1]
+    sspecs = shd.decode_state_specs(state_shapes, cfg, mesh, paged=True)
+    sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    tok_shard = NamedSharding(mesh, shd.batch_specs(
+        {"t": jax.ShapeDtypeStruct((num_slots, 1), jnp.int32)}, mesh)["t"])
+    repl = NamedSharding(mesh, P())
+
+    def decode(params, state, tokens, active):
+        logits, new_state = models.decode_step(
+            params, tokens, cfg, state, mesh=mesh, active=active)
+        return logits, new_state
+
+    def prefill_chunk(params, state, chunk, slot, start, true_len, blocks):
+        logits, new_state = models.prefill_chunk(
+            params, chunk, cfg, state, slot=slot, start=start,
+            true_len=true_len, blocks=blocks, mesh=mesh)
+        return logits[0], new_state
+
+    decode_fn = jax.jit(
+        decode,
+        in_shardings=(pshard, sshard, tok_shard, repl),
+        out_shardings=(repl, sshard),
+        donate_argnums=(1,),
+    )
+    prefill_fn = jax.jit(
+        prefill_chunk,
+        in_shardings=(pshard, sshard, repl, repl, repl, repl, repl),
+        out_shardings=(repl, sshard),
+        donate_argnums=(1,),
+    )
+    return PagedEngineArtifacts(
+        decode_fn=decode_fn, prefill_fn=prefill_fn,
+        decode_raw=decode, prefill_raw=prefill_chunk,
+        param_shardings=pshard, state_shardings=sshard,
+        state_shapes=state_shapes, chunk_buckets=buckets,
+        max_blocks=max_blocks,
+    )
+
+
 def prefill_input_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
     out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
     if cfg.family == "encdec":

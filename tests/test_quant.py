@@ -323,3 +323,73 @@ def test_prequant_moe_ffn_numerics_close_to_float():
     yr = moe_lib.moe_ref(lq, x, top_k=cfg.top_k)
     np.testing.assert_allclose(np.asarray(yq), np.asarray(yr),
                                rtol=2e-5, atol=2e-5)
+
+
+def test_prequant_rwkv_and_mamba_projections():
+    """ROADMAP remainder: RWKV time/channel-mix and Mamba in/out projection
+    weights pre-quantize to QuantizedLinear leaves (per-channel scales,
+    (N, K) layout); LoRA towers, conv/SSM coefficients and norms stay
+    float, and the axes tree transforms in lockstep."""
+    from repro import configs as C
+    from repro import models
+    from repro.models.lm import is_axes_leaf
+    from repro.quant import prequant
+    from repro.quant.int8 import QuantizedLinear
+
+    cfg = C.smoke(C.get_config("rwkv6-3b"))
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    qp = prequant.quantize_params(params)
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    tmix, cmix = qp["layers"]["tmix"], qp["layers"]["cmix"]
+    for name in ("wr", "wk", "wv", "wg", "wo"):
+        leaf = getattr(tmix, name)
+        assert isinstance(leaf, QuantizedLinear), name
+        assert leaf.w_q.shape == (L, d, d) and leaf.w_q.dtype == jnp.int8
+        assert leaf.w_scale.shape == (L, d)
+    assert isinstance(cmix.wk, QuantizedLinear)
+    assert cmix.wk.w_q.shape == (L, f, d)     # (K,N)->(N,K) transpose
+    assert not isinstance(tmix.lora_a, QuantizedLinear)   # tower stays f32
+    assert not isinstance(tmix.w_lora_a, QuantizedLinear)
+    qa = prequant.quantize_axes(models.axes(cfg))
+    assert qa["layers"]["tmix"].wr.w_q == ("layers", "heads", "embed")
+    assert len(jax.tree.leaves(qa, is_leaf=is_axes_leaf)) == \
+        len(jax.tree.leaves(qp))
+
+    hcfg = C.smoke(C.get_config("zamba2-1.2b"))
+    hp = models.init(jax.random.PRNGKey(0), hcfg)
+    hq = prequant.quantize_params(hp)
+    mamba = hq["layers"]["mamba"]
+    assert isinstance(mamba.w_in, QuantizedLinear)
+    assert isinstance(mamba.w_out, QuantizedLinear)
+    assert not isinstance(mamba.conv_w, QuantizedLinear)
+    hqa = prequant.quantize_axes(models.axes(hcfg))
+    assert len(jax.tree.leaves(hqa, is_leaf=is_axes_leaf)) == \
+        len(jax.tree.leaves(hq))
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b"])
+def test_prequant_rwkv_mamba_numerics_close_to_float(arch):
+    """Pre-quantized RWKV/Mamba trees run the full prefill+decode path
+    within int8 error of the float tree (dense() dispatches on leaf type —
+    the recurrences themselves are untouched float math)."""
+    from repro import configs as C
+    from repro import models
+    from repro.core.context import use_context
+
+    cfg = C.smoke(C.get_config(arch))
+    from repro.quant import prequant
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    qp = prequant.quantize_params(params)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    with use_context():
+        s0 = models.init_decode_state(cfg, 2, 16)
+        l0, s0 = models.prefill(params, {"tokens": toks}, cfg, s0)
+        s1 = models.init_decode_state(cfg, 2, 16)
+        l1, s1 = models.prefill(qp, {"tokens": toks}, cfg, s1)
+        assert float(jnp.abs(l0 - l1).max() /
+                     (jnp.abs(l0).max() + 1e-9)) < 0.15
+        t = jnp.argmax(l0, -1)[:, None].astype(jnp.int32)
+        d0, _ = models.decode_step(params, t, cfg, s0)
+        d1, _ = models.decode_step(qp, t, cfg, s1)
+        assert float(jnp.abs(d0 - d1).max() /
+                     (jnp.abs(d0).max() + 1e-9)) < 0.2
