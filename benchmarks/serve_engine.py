@@ -21,6 +21,13 @@ must match the contiguous engine token-for-token, stay plan-warm, and its
 whole-pool footprint must be <= 0.5x the contiguous per-slot footprint at
 the same decode width — the memory-balance claim of the paged refactor.
 
+A fourth pair serves a **shared-system-prompt** trace (every request
+repeats one 64-token header + a unique tail) through the paged engine
+with the radix prefix cache off and on: the cached run must produce
+token-for-token identical output while skipping >= 50% of all prefill
+tokens (the header's blocks are matched out of the trie instead of
+re-prefilled), staying plan-warm throughout.
+
   PYTHONPATH=src python benchmarks/serve_engine.py --json BENCH_serve.json
 """
 from __future__ import annotations
@@ -37,7 +44,7 @@ from repro import configs as C
 from repro import models
 from repro.core.context import use_context
 from repro.launch.mesh import make_local_mesh
-from repro.serve import ServeEngine, synthetic_trace
+from repro.serve import ServeEngine, shared_prefix_trace, synthetic_trace
 from repro.train.servestep import make_serve_step
 
 # Big enough that a decode step's GEMMs dominate dispatch overhead on CPU
@@ -58,6 +65,17 @@ MAX_LEN = PROMPT_PAD + GEN_MAX + 1
 KV_BLOCK = 8
 NUM_KV_BLOCKS = 11
 PREFILL_CHUNK = 8
+# prefix run: 12 requests repeating one 64-token header (8 full KV blocks)
+# + a 4-8 token unique tail. The first NUM_SLOTS admissions race ahead of
+# the first retirement and miss; every later admission matches the whole
+# header — > 50% of all prompt tokens skip prefill on this trace.
+PREFIX_N = 12
+PREFIX_HEADER = 64
+PREFIX_TAILS = (4, 6, 8)
+PREFIX_MAX_NEW = (8, 4, 6)
+PREFIX_CHUNK = 16
+PREFIX_MAX_LEN = PREFIX_HEADER + max(PREFIX_TAILS) + max(PREFIX_MAX_NEW) + 1
+PREFIX_KV_BLOCKS = 61   # roomy: the prefix runs measure dedup, not OOM
 
 
 def bench_config():
@@ -119,10 +137,11 @@ def run_static(cfg, mesh, params) -> dict:
     }
 
 
-def _engine_result(engine, cfg, warm) -> dict:
-    engine.run(_trace(cfg))      # compile
+def _engine_result(engine, cfg, warm, trace_fn=None) -> dict:
+    trace_fn = trace_fn or _trace
+    engine.run(trace_fn(cfg))      # compile
     engine.reset()
-    m = engine.run(_trace(cfg))  # steady-state measurement
+    m = engine.run(trace_fn(cfg))  # steady-state measurement
     d = m.to_dict()
     agg = d["aggregate"]
     return {
@@ -161,6 +180,42 @@ def run_paged(cfg, mesh, params) -> dict:
     return out
 
 
+def _prefix_trace(cfg):
+    return shared_prefix_trace(
+        PREFIX_N, vocab_size=cfg.vocab_size, header_len=PREFIX_HEADER,
+        tail_lens=PREFIX_TAILS, max_new_tokens=PREFIX_MAX_NEW, seed=0)
+
+
+def run_prefix_pair(cfg, mesh, params) -> dict:
+    """The shared-system-prompt trace through the paged engine, prefix
+    cache off then on (identical config otherwise). Off is the baseline
+    for parity and for prefill-token counting; on must skip >= 50% of all
+    prompt tokens and still be plan-warm (the match only changes traced
+    scalars — the chunk-bucket GEMM signature set is untouched)."""
+    common = dict(num_slots=NUM_SLOTS, max_len=PREFIX_MAX_LEN,
+                  prompt_pad=PREFIX_HEADER, kv_block_size=KV_BLOCK,
+                  num_kv_blocks=PREFIX_KV_BLOCKS, prefill_chunk=PREFIX_CHUNK)
+    off = ServeEngine(cfg, mesh, params, **common)
+    warm = off.plan_warmup()
+    off_out = _engine_result(off, cfg, warm, trace_fn=_prefix_trace)
+    on = ServeEngine(cfg, mesh, params, **common, prefix_cache=True)
+    warm_on = on.plan_warmup()
+    on_out = _engine_result(on, cfg, warm_on, trace_fn=_prefix_trace)
+    px = on_out["metrics"]["prefix_cache"]
+    total_prompt = px["lookup_tokens"]
+    return {
+        "off": off_out,
+        "on": on_out,
+        "prefix_cache": px,
+        "token_match": on_out["tokens_by_request"] == off_out["tokens_by_request"],
+        "prompt_tokens": total_prompt,
+        "prefilled_tokens": total_prompt - px["hit_tokens"],
+        "prefill_reduction": px["hit_tokens"] / total_prompt,
+        "requests": PREFIX_N,
+        "header_len": PREFIX_HEADER,
+    }
+
+
 def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
     cfg = bench_config()
     mesh = make_local_mesh()
@@ -169,6 +224,7 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
         static = run_static(cfg, mesh, params)
         engine = run_engine(cfg, mesh, params)
         paged = run_paged(cfg, mesh, params)
+        prefix = run_prefix_pair(cfg, mesh, params)
     speedup = engine["tokens_per_sec"] / static["tokens_per_sec"]
     token_match = (paged["tokens_by_request"] == engine["tokens_by_request"])
     mem_ratio = paged["block_pool"]["memory_ratio"]
@@ -185,11 +241,19 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
          f"mem={mem_ratio:.2f}x match={token_match} "
          f"deferred={paged['deferred_admissions']} "
          f"steady={paged['plan_cache']['steady_state']}")
-    for r in (engine, paged):
+    emit(f"serve/prefix,{prefix['on']['wall_s']*1e6/prefix['on']['useful_tokens']:.1f},"
+         f"tput={prefix['on']['tokens_per_sec']:.1f}tok/s "
+         f"prefill={prefix['prefilled_tokens']}/{prefix['prompt_tokens']} "
+         f"(-{prefix['prefill_reduction']:.0%}) match={prefix['token_match']} "
+         f"steady={prefix['on']['plan_cache']['steady_state']}")
+    for r in (engine, paged, prefix["off"], prefix["on"]):
         r.pop("tokens_by_request")  # parity input, noise in the JSON
     result = {"static": static, "engine": engine, "paged": paged,
+              "prefix": prefix,
               "speedup": speedup, "paged_token_match": token_match,
               "paged_memory_ratio": mem_ratio,
+              "prefix_token_match": prefix["token_match"],
+              "prefix_prefill_reduction": prefix["prefill_reduction"],
               "requests": N_REQUESTS, "num_slots": NUM_SLOTS,
               "prompt_lens": list(PROMPT_LENS), "max_new": list(MAX_NEW)}
     if json_path:
@@ -214,6 +278,16 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
             raise SystemExit(
                 f"paged pool footprint {mem_ratio:.2f}x exceeds the 0.5x "
                 f"contiguous bound")
+        if not prefix["token_match"]:
+            raise SystemExit(
+                "prefix-cache run diverged from the cache-off run")
+        if prefix["prefill_reduction"] < 0.5:
+            raise SystemExit(
+                f"prefix cache skipped only "
+                f"{prefix['prefill_reduction']:.0%} of prefill tokens on "
+                f"the shared-header trace (need >= 50%)")
+        if not prefix["on"]["plan_cache"]["steady_state"]:
+            raise SystemExit("prefix-cache engine loop was not plan-warm")
     return result
 
 

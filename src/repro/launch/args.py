@@ -82,6 +82,18 @@ def add_serve_engine_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
              "prompt pad). Chunks round up to <=3 bucket lengths "
              "{C/4, C/2, C} so prefill stays plan-warm")
     g.add_argument(
+        "--prefix-cache", action="store_true",
+        help="share prompt-prefix KV across requests through a radix "
+             "trie over the paged pool (needs --kv-block-size; blocks "
+             "become ref-counted, full-block prefixes are cached at "
+             "retirement and matched at admission — zero prefill for "
+             "shared headers, token-for-token identical output)")
+    g.add_argument(
+        "--prefix-cache-blocks", type=int, default=None, metavar="N",
+        help="cap the prefix cache at N pool blocks (LRU leaves are "
+             "trimmed past it; default: unbounded — cached-idle blocks "
+             "are reclaimed on demand before the pool reports OOM)")
+    g.add_argument(
         "--temperature", type=float, default=0.0, metavar="T",
         help="sampling temperature (0 = greedy; host-side, per-request "
              "seeded streams)")

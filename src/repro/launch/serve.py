@@ -31,7 +31,10 @@ GEMM signature set (docs/serving.md):
 ``--kv-block-size`` switches the engine's cache to the paged block-pool
 layout (per-slot block tables, chunked prefill via ``--prefill-chunk``,
 pool sized by ``--num-kv-blocks``); ``--temperature``/``--top-p`` enable
-host-side per-request-seeded sampling. See docs/serving.md.
+host-side per-request-seeded sampling. ``--prefix-cache`` (paged only)
+shares prompt-prefix KV across requests through the radix trie
+(``--prefix-cache-blocks`` caps it) and serves a shared-header trace so
+the dedup is visible in the metrics. See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -121,17 +124,42 @@ def _measure_plans(ctx, args) -> None:
 
 
 def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
-    """--engine: continuous batching over a mixed-length synthetic trace."""
-    from repro.serve import ServeEngine, synthetic_trace
+    """--engine: continuous batching over a mixed-length synthetic trace
+    (with --prefix-cache: a shared-header trace, so the radix cache has
+    prefixes to dedupe)."""
+    from repro.serve import ServeEngine, shared_prefix_trace, synthetic_trace
 
+    if args.prefix_cache and not args.kv_block_size:
+        raise SystemExit("--prefix-cache needs the paged engine: pass "
+                         "--kv-block-size too")
     gen = args.max_new_tokens or args.gen
     plen = args.prompt_len
+    stop = (args.eos_id,) if args.eos_id is not None else ()
+    n_requests = max(args.batch, 2 * args.num_slots)
+    if args.prefix_cache:
+        # every request repeats a plen-token header + a short unique tail
+        tails = [1, 3, 5]
+        trace = shared_prefix_trace(
+            n_requests, vocab_size=cfg.vocab_size, header_len=plen,
+            tail_lens=tails,
+            max_new_tokens=[gen, max(1, gen // 2), max(1, gen // 4)],
+            stop_ids=stop, seed=0)
+        max_len = plen + max(tails) + gen + 1
+    else:
+        trace = synthetic_trace(
+            n_requests, vocab_size=cfg.vocab_size,
+            prompt_lens=[plen, max(1, plen // 2), max(1, (3 * plen) // 4)],
+            max_new_tokens=[gen, max(1, gen // 2), max(1, gen // 4)],
+            stop_ids=stop, seed=0)
+        max_len = plen + gen + 1
     engine = ServeEngine(
         cfg, mesh, params, num_slots=args.num_slots,
-        max_len=plen + gen + 1, prompt_pad=plen, param_axes=param_axes,
+        max_len=max_len, prompt_pad=plen, param_axes=param_axes,
         kv_block_size=args.kv_block_size or None,
         num_kv_blocks=args.num_kv_blocks,
         prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_blocks=args.prefix_cache_blocks,
         temperature=args.temperature, top_p=args.top_p)
     if not args.no_warmup:
         t0 = time.perf_counter()
@@ -140,13 +168,6 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
         if args.measure_plans:
             _measure_plans(ctx, args)
 
-    trace = synthetic_trace(
-        max(args.batch, 2 * args.num_slots),
-        vocab_size=cfg.vocab_size,
-        prompt_lens=[plen, max(1, plen // 2), max(1, (3 * plen) // 4)],
-        max_new_tokens=[gen, max(1, gen // 2), max(1, gen // 4)],
-        stop_ids=(args.eos_id,) if args.eos_id is not None else (),
-        seed=0)
     m = engine.run(trace)
     qtag = f" quant={ctx.quant_mode}" if ctx.quant_mode else ""
     ptag = (f" paged(block={engine.kv_block_size},"
@@ -164,6 +185,12 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
               f"{bp['memory_ratio']:.2f}x contiguous, "
               f"{m.deferred_admissions} deferred admissions, "
               f"peak internal frag {bp['peak_fragmentation_tokens']} tokens")
+    if m.prefix_cache:
+        px = m.prefix_cache
+        print(f"[prefix-cache] hit {px['hit_tokens']}/{px['lookup_tokens']} "
+              f"prompt tokens ({px['hit_rate']:.2f} hit rate), "
+              f"{px['inserted_blocks']} blocks cached, "
+              f"{px['reclaimed_blocks']} reclaimed")
     pc = m.plan_cache
     print(f"[plan-cache] serving: hits={pc['hits']} misses={pc['misses']} "
           f"lazy_solves={pc['lazy_solves']} "

@@ -5,17 +5,21 @@ functions (``train.servestep.make_engine_step`` /
 ``make_paged_engine_step``) are fixed-shape; the scheduler (``scheduler``)
 maps one onto the other through ``num_slots`` decode lanes — with paged KV
 (``blockpool``), the lanes' cache is a block pool indexed per-slot block
-tables and prompts prefill chunk by chunk; ``engine`` runs the tick loop
-and ``metrics`` reports it.
+tables and prompts prefill chunk by chunk; ``prefixcache`` deduplicates
+shared prompt prefixes across requests over those same block tables
+(ref-counted blocks, radix-trie index, LRU reclaim); ``engine`` runs the
+tick loop and ``metrics`` reports it.
 """
 from repro.serve.blockpool import BlockPool, blocks_for
 from repro.serve.engine import ServeEngine, chunk_buckets
 from repro.serve.metrics import EngineMetrics
-from repro.serve.request import Request, RequestState, synthetic_trace
+from repro.serve.prefixcache import PrefixCache
+from repro.serve.request import (Request, RequestState, shared_prefix_trace,
+                                 synthetic_trace)
 from repro.serve.scheduler import SlotScheduler
 
 __all__ = [
     "ServeEngine", "EngineMetrics", "Request", "RequestState",
-    "SlotScheduler", "BlockPool", "blocks_for", "chunk_buckets",
-    "synthetic_trace",
+    "SlotScheduler", "BlockPool", "PrefixCache", "blocks_for",
+    "chunk_buckets", "synthetic_trace", "shared_prefix_trace",
 ]

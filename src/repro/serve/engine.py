@@ -14,7 +14,13 @@ compiled step functions (device-side, fixed shapes):
   chunk per tick — interleaved with decode, so a long admit never stalls
   the running batch;
 * eviction on stop-id / max-new-tokens frees the lane (and, paged, returns
-  the request's blocks to the pool) for the queue head.
+  the request's blocks to the pool) for the queue head;
+* with the **prefix cache** on (``prefix_cache=True``, paged only),
+  admission first maps any cached prompt prefix's blocks straight into the
+  slot's block table — chunked prefill then starts at the first uncached
+  token (zero prefill GEMMs for the shared header), and retirement indexes
+  the request's full-block prefixes for the next arrival. Decode output is
+  token-for-token identical to cache-off (serve/prefixcache.py).
 
 Because slot count, chunk buckets, max_len and model dims are all fixed at
 engine build, every tick issues the identical GEMM signature set. The
@@ -42,6 +48,7 @@ from repro.configs.base import ModelConfig
 from repro.core.context import current_context
 from repro.serve.blockpool import BlockPool
 from repro.serve.metrics import EngineMetrics
+from repro.serve.prefixcache import PrefixCache
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
 from repro.train.servestep import make_engine_step, make_paged_engine_step
@@ -72,6 +79,8 @@ class ServeEngine:
         kv_block_size: int | None = None,
         num_kv_blocks: int | None = None,
         prefill_chunk: int | None = None,
+        prefix_cache: bool = False,
+        prefix_cache_blocks: int | None = None,
         temperature: float = 0.0,
         top_p: float = 1.0,
         seed: int = 0,
@@ -87,6 +96,12 @@ class ServeEngine:
         self.top_p = top_p
         self.seed = seed
         self.paged = bool(kv_block_size)
+        if prefix_cache and not self.paged:
+            raise ValueError(
+                "the prefix cache shares KV at block granularity — it "
+                "needs the paged engine (kv_block_size)")
+        self.prefix_cache_enabled = bool(prefix_cache)
+        self.prefix_cache_blocks = prefix_cache_blocks
         param_shapes = (None if param_axes is None
                         else jax.eval_shape(lambda: params))
         if self.paged:
@@ -134,8 +149,10 @@ class ServeEngine:
             self.state = self._init_fn()
         pool = (BlockPool(self.num_kv_blocks, self.kv_block_size)
                 if self.paged else None)
+        cache = (PrefixCache(pool, max_cached_blocks=self.prefix_cache_blocks)
+                 if self.prefix_cache_enabled else None)
         self.sched = SlotScheduler(self.num_slots, max_len=self.max_len,
-                                   pool=pool)
+                                   pool=pool, prefix_cache=cache)
         self._next_tok = np.full((self.num_slots,), self.pad_id, np.int64)
         engine_info = {
             "arch": self.cfg.name,
@@ -154,7 +171,9 @@ class ServeEngine:
                 kv_block_size=self.kv_block_size,
                 num_kv_blocks=self.num_kv_blocks,
                 prefill_chunk=self.prefill_chunk,
-                chunk_buckets=list(self.chunk_buckets))
+                chunk_buckets=list(self.chunk_buckets),
+                prefix_cache=self.prefix_cache_enabled,
+                prefix_cache_blocks=self.prefix_cache_blocks)
         self.metrics = EngineMetrics(engine=engine_info)
 
     # ------------------------------------------------------------ warm-up
@@ -381,6 +400,8 @@ class ServeEngine:
         self.metrics.admissions = counters["admissions"]
         self.metrics.evictions = counters["evictions"]
         self.metrics.deferred_admissions = counters["deferred_admissions"]
+        if self.sched.prefix_cache is not None:
+            self.metrics.record_prefix_cache(self.sched.prefix_cache)
         return self.metrics
 
     @property

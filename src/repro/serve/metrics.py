@@ -7,18 +7,35 @@ Schema (``EngineMetrics.to_dict``, documented in docs/serving.md):
 {
   "engine": {num_slots, max_len, prompt_pad, arch, hw, backend, quant,
              paged, temperature, top_p,
-             [kv_block_size, num_kv_blocks, prefill_chunk, chunk_buckets]},
+             [kv_block_size, num_kv_blocks, prefill_chunk, chunk_buckets,
+              prefix_cache, prefix_cache_blocks]},
   "aggregate": {wall_s, ticks, generated_tokens, tokens_per_sec,
                 mean_occupancy, admissions, deferred_admissions,
                 evictions{reason: n}, queue_peak},
-  "requests": [{request_id, prompt_len, tokens, ttft_s, total_s,
-                per_token_s, finish_reason, admitted_tick, finished_tick}],
+  "requests": [{request_id, prompt_len, cached_tokens, tokens, ttft_s,
+                total_s, per_token_s, finish_reason, admitted_tick,
+                finished_tick}],
   "block_pool": {num_blocks, block_size, peak_in_use, peak_utilization,
                  peak_fragmentation_tokens, pool_tokens, contiguous_tokens,
-                 memory_ratio, allocs, frees, failed_allocs},   # paged only
+                 memory_ratio, allocs, frees, failed_allocs, increfs,
+                 cached_idle_blocks, reclaimed_blocks},   # paged only
+  "prefix_cache": {lookups, lookup_tokens, hits, hit_tokens, hit_rate,
+                   inserted_blocks, duplicate_blocks, cached_blocks,
+                   cached_idle_blocks, reclaimed_blocks, trimmed_blocks,
+                   max_cached_blocks},   # --prefix-cache only
   "plan_cache": {hits, misses, lazy_solves, warm_solves, steady_state}
 }
 ```
+
+``prefix_cache.hit_rate`` is hit_tokens / lookup_tokens — the fraction of
+all admitted prompt tokens whose prefill GEMMs the radix cache skipped
+(docs/serving.md; the shared-prompt benchmark asserts >= 0.5 on its
+trace); deferred-admission retries are un-counted, so the rate reflects
+admissions only. ``reclaimed_blocks`` counts cached-idle blocks
+surrendered to the allocator under pressure (LRU leaves first);
+``trimmed_blocks`` counts --prefix-cache-blocks cap evictions — routine,
+not a pressure signal. ``block_pool.reclaimed_blocks`` is their sum
+(every block the cache returned to the free list).
 
 ``memory_ratio`` is the paged pool's whole-cache token capacity over the
 contiguous layout's ``num_slots * max_len`` — the footprint the block-table
@@ -51,6 +68,7 @@ class EngineMetrics:
     evictions: dict[str, int] = dataclasses.field(default_factory=dict)
     requests: list[dict[str, Any]] = dataclasses.field(default_factory=list)
     block_pool: dict[str, Any] = dataclasses.field(default_factory=dict)
+    prefix_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
     plan_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------ record
@@ -69,6 +87,7 @@ class EngineMetrics:
         self.requests.append({
             "request_id": req.request_id,
             "prompt_len": req.prompt_len,
+            "cached_tokens": st.cached_tokens,
             "tokens": n,
             "ttft_s": (None if st.first_token_s is None
                        else st.first_token_s - st.admitted_s),
@@ -94,6 +113,11 @@ class EngineMetrics:
         stats["memory_ratio"] = (stats["pool_tokens"] / contiguous_tokens
                                  if contiguous_tokens else 0.0)
         self.block_pool = stats
+
+    def record_prefix_cache(self, cache) -> None:
+        """Snapshot the radix cache's cumulative counters (engine.run calls
+        this once per run; the cache object is reset with the engine)."""
+        self.prefix_cache = cache.stats()
 
     def record_plan_cache(self, before: PlanCacheStats,
                           after: PlanCacheStats) -> None:
@@ -132,6 +156,7 @@ class EngineMetrics:
             },
             "requests": list(self.requests),
             "block_pool": dict(self.block_pool),
+            "prefix_cache": dict(self.prefix_cache),
             "plan_cache": dict(self.plan_cache),
         }
 

@@ -32,6 +32,11 @@ class Request:
     sampling stream — unset, the engine derives one from its own seed and
     the request's admission index, so a fixed trace replays token-for-token
     either way.
+
+    ``cache_salt`` namespaces the prompt-prefix cache: requests only ever
+    share cached KV blocks with requests carrying the same salt, so a
+    unique salt opts a request (or tenant) out of cross-request sharing
+    entirely. ``None`` (default) is the common shared namespace.
     """
 
     prompt: np.ndarray
@@ -40,6 +45,7 @@ class Request:
     temperature: float | None = None
     top_p: float | None = None
     seed: int | None = None
+    cache_salt: str | int | None = None
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     arrival_tick: int = -1
 
@@ -87,6 +93,8 @@ class RequestState:
     finish_reason: str | None = None     # 'stop' | 'length' | None (active)
     blocks: list[int] | None = None      # paged KV pool blocks (in order)
     prefill_done: int = 0                # prompt tokens written so far
+    cached_tokens: int = 0               # prompt tokens served by the
+                                         # prefix cache (never prefilled)
     admission_index: int = -1            # nth admission of this engine run
     rng: np.random.Generator | None = dataclasses.field(
         default=None, repr=False)
@@ -135,6 +143,36 @@ def synthetic_trace(
         plen = int(prompt_lens[i % len(prompt_lens)])
         out.append(Request(
             prompt=rng.integers(0, vocab_size, size=plen, dtype=np.int32),
+            max_new_tokens=int(max_new_tokens[i % len(max_new_tokens)]),
+            stop_ids=stop_ids,
+        ))
+    return out
+
+
+def shared_prefix_trace(
+    n_requests: int,
+    *,
+    vocab_size: int,
+    header_len: int,
+    tail_lens: Sequence[int],
+    max_new_tokens: Sequence[int],
+    stop_ids: tuple[int, ...] = (),
+    seed: int = 0,
+) -> list[Request]:
+    """A trace where every request repeats one ``header_len``-token header
+    (system prompt / few-shot block) followed by a per-request random tail
+    — the traffic shape the prefix cache (serve/prefixcache.py) exists
+    for. Prompts are pairwise distinct (tails are independent draws), so
+    output parity vs a cache-off run is checkable per request."""
+    rng = np.random.default_rng(seed)
+    header = rng.integers(0, vocab_size, size=header_len, dtype=np.int32)
+    out = []
+    for i in range(n_requests):
+        tail = rng.integers(
+            0, vocab_size, size=int(tail_lens[i % len(tail_lens)]),
+            dtype=np.int32)
+        out.append(Request(
+            prompt=np.concatenate([header, tail]),
             max_new_tokens=int(max_new_tokens[i % len(max_new_tokens)]),
             stop_ids=stop_ids,
         ))

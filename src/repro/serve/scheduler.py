@@ -19,6 +19,20 @@ generation budget, so a request admitted can always run to completion
 simply waits (``deferred_admissions`` counts the stalls); a request whose
 prompt + budget could never fit even an empty pool is refused at submit.
 
+**Admission is strictly FIFO, deferrals included**: only the queue head is
+ever tried, so a deferred head re-checks in arrival order on every tick
+and later arrivals — even ones that would fit the remaining blocks, even
+ones whose prefix is fully cached — cannot steal freed blocks from it.
+No starvation by traffic shape.
+
+With a :class:`repro.serve.prefixcache.PrefixCache` attached too,
+admission first matches the prompt against the radix trie: matched blocks
+(increfed, read-only) go straight into the head of the request's block
+list, only the remainder is allocated, and ``prefill_done`` starts at the
+matched token count so chunked prefill begins at the first uncached
+token. At eviction the request's full-block prefixes are inserted into
+the trie before its references drop.
+
 Pure host-side Python (numpy only), trivially unit-testable.
 """
 from __future__ import annotations
@@ -28,17 +42,24 @@ import collections
 import numpy as np
 
 from repro.serve.blockpool import BlockPool
+from repro.serve.prefixcache import PrefixCache
 from repro.serve.request import Request, RequestState
 
 
 class SlotScheduler:
     def __init__(self, num_slots: int, *, max_len: int,
-                 pool: BlockPool | None = None):
+                 pool: BlockPool | None = None,
+                 prefix_cache: PrefixCache | None = None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
+        if prefix_cache is not None and pool is None:
+            raise ValueError("prefix_cache needs a BlockPool (paged KV)")
+        if prefix_cache is not None and prefix_cache.pool is not pool:
+            raise ValueError("prefix_cache is bound to a different pool")
         self.num_slots = num_slots
         self.max_len = max_len
         self.pool = pool
+        self.prefix_cache = prefix_cache
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[RequestState | None] = [None] * num_slots
         self.tick = 0
@@ -95,20 +116,34 @@ class SlotScheduler:
     def admit_next(self, now_s: float = 0.0) -> RequestState | None:
         """Bind the FIFO head to the lowest free slot; None if the queue is
         empty, every lane is occupied, or (paged) the pool cannot cover the
-        head's prompt + budget right now — the head stays queued and the
-        stall is counted."""
+        head's prompt + budget right now — the head stays queued (nothing
+        behind it is tried: freed blocks cannot be stolen by later
+        arrivals) and the stall is counted."""
         free = self.free_slots()
         if not free or not self.queue:
             return None
         req = self.queue[0]
         blocks = None
+        cached_tokens = 0
         if self.pool is not None:
+            shared: list[int] = []
+            if self.prefix_cache is not None:
+                # match first: the incref pins the prefix against the
+                # reclaim alloc() may run to satisfy the remainder
+                shared = self.prefix_cache.match(req.prompt, req.cache_salt)
+                cached_tokens = len(shared) * self.pool.block_size
             need = self.pool.blocks_for(
                 req.prompt_len + req.budget(self.max_len))
-            blocks = self.pool.alloc(need)
-            if blocks is None:
+            fresh = self.pool.alloc(need - len(shared))
+            if fresh is None:
+                if self.prefix_cache is not None:
+                    # undo the match — references AND counters: a deferred
+                    # head re-matches every tick, and only the attempt
+                    # that admits may count toward hit_rate
+                    self.prefix_cache.cancel(req.prompt, shared)
                 self._deferred += 1
                 return None
+            blocks = shared + fresh
         self.queue.popleft()
         st = RequestState(
             request=req, slot=free[0], admitted_tick=self.tick,
@@ -117,6 +152,11 @@ class SlotScheduler:
         self.slots[free[0]] = st
         self._admissions += 1
         if self.pool is not None:
+            # cached prefix tokens are already written: chunked prefill
+            # starts at the first uncached token (zero prefill if capped
+            # only by the last-token rule)
+            st.prefill_done = cached_tokens
+            st.cached_tokens = cached_tokens
             self._prefill_order.append(free[0])
         else:
             st.prefill_done = req.prompt_len   # one-shot admission prefill
@@ -153,7 +193,13 @@ class SlotScheduler:
         self.finished.append(st)
         self._evictions[reason] = self._evictions.get(reason, 0) + 1
         if self.pool is not None and st.blocks:
-            self.pool.free(st.blocks)
+            if self.prefix_cache is not None:
+                # adopt the full-block prefixes before dropping references
+                # (mark_cached needs them live); shared leading blocks are
+                # already nodes and insert nothing
+                self.prefix_cache.insert(st.request.prompt, st.blocks,
+                                         st.request.cache_salt)
+            self.pool.decref(st.blocks)
         if slot in self._prefill_order:
             self._prefill_order.remove(slot)
         return st
@@ -176,4 +222,6 @@ class SlotScheduler:
         }
         if self.pool is not None:
             out["block_pool"] = self.pool.stats()
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
         return out

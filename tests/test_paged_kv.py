@@ -95,6 +95,28 @@ def test_scheduler_defers_admission_until_blocks_free():
     assert s.counters()["block_pool"]["frees"] == 1
 
 
+def test_scheduler_deferred_head_rechecks_fifo_no_stealing():
+    """Starvation regression: while the queue head waits for blocks, later
+    arrivals that WOULD fit the remaining free list are not admitted — the
+    head re-checks first on every tick and freed blocks go to it in
+    arrival order."""
+    pool = BlockPool(num_blocks=9, block_size=4)     # 8 usable
+    s = SlotScheduler(2, max_len=32, pool=pool)
+    hog = pool.alloc(4)                              # 4 blocks left
+    big, small = _requests([(20, 4), (4, 4)])        # need 6 / 2 blocks
+    s.submit(big)
+    s.submit(small)
+    for _ in range(3):                               # re-checks stay FIFO
+        assert s.admit_next() is None                # head deferred...
+        assert s.occupancy() == 0 and s.pending == 2  # ...small didn't steal
+    assert s.counters()["deferred_admissions"] == 3
+    pool.free(hog)                                   # pressure lifts
+    first, second = s.admit_next(), s.admit_next()
+    assert first.request.request_id == big.request_id   # arrival order
+    assert second.request.request_id == small.request_id
+    assert s.counters()["block_pool"]["failed_allocs"] == 3
+
+
 def test_scheduler_hard_refuses_request_that_can_never_fit():
     pool = BlockPool(num_blocks=4, block_size=4)    # 12 usable tokens
     s = SlotScheduler(1, max_len=32, pool=pool)

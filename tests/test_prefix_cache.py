@@ -1,0 +1,372 @@
+"""Prefix cache over the paged KV pool: block ref-counting, radix-trie
+match/insert, LRU reclaim under pressure, cache_salt isolation, FIFO
+fairness with cached arrivals, and engine-level token parity (cache-on
+output must equal cache-off, token for token)."""
+import numpy as np
+import pytest
+import jax
+
+from repro import configs as C
+from repro import models
+from repro.core.context import use_context
+from repro.core.plancache import PlanCache
+from repro.launch.mesh import make_local_mesh
+from repro.serve import (BlockPool, PrefixCache, Request, ServeEngine,
+                         SlotScheduler, shared_prefix_trace)
+
+
+def _prompt(n, seed=0, vocab=503):
+    return np.random.default_rng(seed).integers(
+        0, vocab, size=n, dtype=np.int32)
+
+
+def _requests(spec, vocab=503, stop=(), seed=7, **kw):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(0, vocab, size=p, dtype=np.int32),
+                max_new_tokens=g, stop_ids=stop, **kw)
+        for p, g in spec
+    ]
+
+
+# ------------------------------------------------------ block refcounting
+def test_blockpool_incref_decref_shared_block():
+    pool = BlockPool(num_blocks=6, block_size=4)
+    a = pool.alloc(2)
+    pool.incref(a)                           # a second sharer
+    assert pool.refcount(a[0]) == 2
+    pool.decref(a)                           # first sharer retires
+    assert pool.refcount(a[0]) == 1
+    assert pool.free_blocks == 3             # still held
+    pool.decref(a)
+    assert pool.refcount(a[0]) == 0 and pool.free_blocks == 5
+    with pytest.raises(ValueError):
+        pool.decref(a)                       # double free
+    with pytest.raises(ValueError):
+        pool.incref([a[0]])                  # not referenced, not cached
+
+
+def test_blockpool_decref_of_cached_block_idles_instead_of_freeing():
+    pool = BlockPool(num_blocks=6, block_size=4)
+    a = pool.alloc(2)
+    pool.mark_cached(a[0])
+    pool.decref(a)
+    assert pool.free_blocks == 4             # a[1] freed, a[0] parked
+    assert pool.cached_idle_blocks == 1
+    pool.incref([a[0]])                      # cache hit revives it
+    assert pool.refcount(a[0]) == 1 and pool.cached_idle_blocks == 0
+    pool.decref([a[0]])
+    assert pool.cached_idle_blocks == 1
+    with pytest.raises(ValueError):
+        pool.mark_cached(a[1])               # unreferenced: cannot adopt
+
+
+def test_blockpool_alloc_reclaims_cached_idle_before_oom():
+    pool = BlockPool(num_blocks=5, block_size=4)     # 4 usable
+    cache = PrefixCache(pool)
+    blocks = pool.alloc(2)
+    cache.insert(_prompt(8), blocks)
+    pool.decref(blocks)                      # both cached-idle
+    assert pool.free_blocks == 2 and pool.cached_idle_blocks == 2
+    got = pool.alloc(4)                      # needs the idle pair back
+    assert got is not None and len(got) == 4
+    assert pool.reclaimed_blocks == 2 and cache.cached_blocks == 0
+    assert cache.match(_prompt(8)) == []     # trie entry is gone too
+
+
+# ------------------------------------------------------------- radix trie
+def test_trie_match_insert_roundtrip_and_refcounts():
+    pool = BlockPool(num_blocks=10, block_size=4)
+    cache = PrefixCache(pool)
+    p = _prompt(10)                          # 2 full blocks + partial tail
+    blocks = pool.alloc(3)
+    assert cache.insert(p, blocks) == 2      # partial tail never indexed
+    pool.decref(blocks)
+    assert pool.free_blocks == 7             # tail block freed outright
+    got = cache.match(p)
+    assert got == blocks[:2]
+    assert all(pool.refcount(b) == 1 for b in got)   # caller owns a ref
+    assert cache.hit_tokens == 8
+    pool.decref(got)
+    assert pool.cached_idle_blocks == 2
+
+
+def test_match_always_leaves_one_token_to_prefill():
+    """A fully block-aligned, fully cached prompt still prefills its final
+    block — the engine samples the first output token from that chunk's
+    logits, so a zero-length prefill is never produced."""
+    pool = BlockPool(num_blocks=10, block_size=4)
+    cache = PrefixCache(pool)
+    p = _prompt(8)                           # exactly 2 blocks
+    blocks = pool.alloc(2)
+    cache.insert(p, blocks)
+    pool.decref(blocks)
+    got = cache.match(p)                     # cap: (8-1)//4 = 1 block
+    assert got == blocks[:1]
+    assert cache.hit_tokens == 4
+    pool.decref(got)
+
+
+def test_partial_tail_block_is_never_shared():
+    pool = BlockPool(num_blocks=10, block_size=4)
+    cache = PrefixCache(pool)
+    p1 = _prompt(10, seed=1)
+    blocks = pool.alloc(3)
+    cache.insert(p1, blocks)
+    pool.decref(blocks)
+    # same 10 leading tokens, different continuation: only the 2 full
+    # blocks match — the shared-but-partial tail is recomputed
+    p2 = np.concatenate([p1, _prompt(6, seed=2)])
+    got = cache.match(p2)
+    assert got == blocks[:2]
+    pool.decref(got)
+
+
+def test_double_insert_of_same_prefix_keeps_first_copy():
+    """Two requests with the same prompt prefilled concurrently (neither
+    could match the other): the second retirement adopts nothing and its
+    duplicate blocks drop straight to the free list."""
+    pool = BlockPool(num_blocks=10, block_size=4)
+    cache = PrefixCache(pool)
+    p = _prompt(8)
+    a = pool.alloc(2)
+    b = pool.alloc(2)
+    assert cache.insert(p, a) == 2
+    assert cache.insert(p, b) == 0           # trie keeps the first copy
+    assert cache.duplicate_blocks == 2
+    pool.decref(a)
+    pool.decref(b)
+    assert pool.cached_idle_blocks == 2      # only a's copy is cached
+    assert pool.free_blocks == 7             # b's copy went back to free
+    assert cache.match(p) == a[:1]
+    pool.decref(a[:1])
+
+
+def test_lru_reclaim_evicts_least_recently_used_leaf_first():
+    pool = BlockPool(num_blocks=12, block_size=4)    # 11 usable
+    cache = PrefixCache(pool)
+    pa, pb = _prompt(8, seed=1), _prompt(8, seed=2)
+    a = pool.alloc(2)
+    cache.insert(pa, a)
+    pool.decref(a)
+    b = pool.alloc(2)
+    cache.insert(pb, b)
+    pool.decref(b)
+    # touch BOTH of a's nodes (a longer probe walks past the last-token
+    # cap that an exact-length match stops short of): b is now LRU
+    touched = cache.match(np.concatenate([pa, _prompt(4, seed=3)]))
+    assert touched == a
+    pool.decref(touched)
+    got = pool.alloc(9)                      # 7 free: must reclaim 2
+    assert got is not None
+    assert pool.reclaimed_blocks == 2
+    assert cache.match(pb) == []             # b evicted (leaf, then root)
+    assert cache.match(pa) == a[:1]          # a survived
+    pool.decref(a[:1])
+    pool.decref(got)
+
+
+def test_reclaim_never_touches_blocks_referenced_by_live_requests():
+    pool = BlockPool(num_blocks=6, block_size=4)     # 5 usable
+    cache = PrefixCache(pool)
+    p = _prompt(8)
+    a = pool.alloc(2)
+    cache.insert(p, a)
+    pool.decref(a)
+    live = cache.match(p)                    # a[0] pinned by a live request
+    assert live == a[:1]
+    assert pool.alloc(5) is None             # only a[1] is reclaimable: 3+1 < 5
+    assert pool.alloc(4) is not None         # free 3 + reclaim a[1]
+    assert pool.refcount(a[0]) == 1          # pinned block untouched
+    assert cache.match(p) == a[:1]           # ...and still matchable
+    pool.decref(a[:1])
+    pool.decref(live)
+
+
+def test_cache_salt_isolates_tenants():
+    pool = BlockPool(num_blocks=10, block_size=4)
+    cache = PrefixCache(pool)
+    p = _prompt(12)
+    a = pool.alloc(3)
+    cache.insert(p, a, salt="tenant-a")
+    pool.decref(a)
+    assert cache.match(p, salt="tenant-b") == []
+    assert cache.match(p, salt=None) == []   # default namespace is its own
+    assert cache.match(p, salt="") == []     # "" is NOT an alias of None
+    got = cache.match(p, salt="tenant-a")
+    assert got == a[:2]
+    pool.decref(got)
+    b = pool.alloc(2)
+    cache.insert(_prompt(8, seed=8), b, salt=None)
+    pool.decref(b)
+    assert cache.match(_prompt(8, seed=8), salt="") == []  # and vice versa
+
+
+def test_max_cached_blocks_cap_trims_lru():
+    pool = BlockPool(num_blocks=12, block_size=4)
+    cache = PrefixCache(pool, max_cached_blocks=2)
+    pa, pb = _prompt(12, seed=1), _prompt(8, seed=2)
+    a = pool.alloc(3)
+    cache.insert(pa, a)                      # 3 nodes; none evictable yet
+    pool.decref(a)
+    assert cache.cached_blocks == 3          # transient overshoot is allowed
+    b = pool.alloc(2)
+    cache.insert(pb, b)                      # trim: a's idle chain goes
+    pool.decref(b)
+    assert cache.cached_blocks == 2
+    assert cache.trimmed_blocks == 3         # cap-driven, not pressure
+    assert cache.reclaimed_blocks == 0
+    assert cache.match(pa) == []
+    got = cache.match(pb)
+    assert got == b[:1]
+    pool.decref(got)
+
+
+# --------------------------------------------------- FIFO under pressure
+def test_deferred_head_blocks_cached_later_arrival():
+    """Fairness: while the queue head waits for blocks, a later arrival is
+    not admitted — not even one whose prompt is fully cached and would
+    cost almost nothing."""
+    pool = BlockPool(num_blocks=12, block_size=4)    # 11 usable
+    cache = PrefixCache(pool)
+    small_prompt = _prompt(8, seed=3)
+    warm = pool.alloc(2)
+    cache.insert(small_prompt, warm)
+    pool.decref(warm)
+    hog = pool.alloc(6)                      # free 3, cached-idle 2
+    s = SlotScheduler(2, max_len=32, pool=pool, prefix_cache=cache)
+    big = Request(prompt=_prompt(20, seed=4), max_new_tokens=4)   # 6 blocks
+    small = Request(prompt=small_prompt.copy(), max_new_tokens=4)
+    s.submit(big)
+    s.submit(small)
+    assert s.admit_next() is None            # head can't fit (3+2 < 6)...
+    assert s.occupancy() == 0 and s.pending == 2   # ...small didn't steal
+    assert s.counters()["deferred_admissions"] == 1
+    pool.decref(hog)                         # pressure lifts
+    first, second = s.admit_next(), s.admit_next()
+    assert first.request is big              # strict arrival order
+    assert second.request is small
+
+
+def test_deferred_admission_undoes_its_prefix_match():
+    """A head that matches the trie but can't get its remaining blocks
+    must drop the matched references on deferral — otherwise a stalled
+    head pins cached blocks it doesn't own yet."""
+    pool = BlockPool(num_blocks=9, block_size=4)     # 8 usable
+    cache = PrefixCache(pool)
+    p = _prompt(8, seed=5)
+    warm = pool.alloc(2)
+    cache.insert(p, warm)
+    pool.decref(warm)
+    hog = pool.alloc(5)                      # free 1, cached-idle 2
+    s = SlotScheduler(2, max_len=40, pool=pool, prefix_cache=cache)
+    # needs blocks_for(8 + 24) = 8, has 1 match + 1 free + 1 reclaimable
+    s.submit(Request(prompt=p.copy(), max_new_tokens=24))
+    assert s.admit_next() is None
+    assert s.counters()["deferred_admissions"] == 1
+    assert pool.blocks_in_use == 5           # only the hog holds references
+    assert all(pool.refcount(b) == 0 for b in warm)
+    # the failed attempt is fully un-counted: hit_rate reflects admissions
+    assert cache.lookups == 0 and cache.lookup_tokens == 0
+    assert cache.hits == 0 and cache.hit_tokens == 0
+    pool.decref(hog)
+
+
+# ------------------------------------------------------- engine parity
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = C.smoke(C.get_config("qwen1.5-4b"))
+    mesh = make_local_mesh()
+    params = models.init(jax.random.PRNGKey(3), cfg)
+    return cfg, mesh, params
+
+
+def _run_shared_trace(cfg, mesh, params, *, prefix, **engine_kw):
+    with use_context(plan_cache=PlanCache()):
+        engine = ServeEngine(cfg, mesh, params, prefix_cache=prefix,
+                             **engine_kw)
+        engine.plan_warmup()
+        trace = shared_prefix_trace(
+            6, vocab_size=cfg.vocab_size, header_len=16, tail_lens=[2, 3],
+            max_new_tokens=[4, 6], seed=0)
+        m = engine.run(trace)
+    toks = {st.request.prompt.tobytes(): st.tokens for st in engine.finished}
+    return toks, m, engine
+
+
+def test_engine_prefix_cache_token_parity_and_hits(dense_setup):
+    """The acceptance gate: cache-on decode output is token-for-token
+    identical to cache-off on a shared-header trace, with >50% of prompt
+    tokens served from the trie and the loop still plan-warm (the match
+    only changes traced scalars, never the GEMM signature set)."""
+    cfg, mesh, params = dense_setup
+    kw = dict(num_slots=2, max_len=40, prompt_pad=16, kv_block_size=4,
+              num_kv_blocks=40, prefill_chunk=8)
+    off, m_off, _ = _run_shared_trace(cfg, mesh, params, prefix=False, **kw)
+    on, m_on, engine = _run_shared_trace(cfg, mesh, params, prefix=True, **kw)
+    assert on == off
+    px = m_on.prefix_cache
+    assert px["hit_tokens"] > 0 and px["hit_rate"] > 0.5
+    assert px["inserted_blocks"] > 0
+    assert m_on.plan_cache["steady_state"] is True
+    assert m_off.prefix_cache == {}          # off: empty schema section
+    # per-request metrics surface what each admission skipped
+    cached = [r["cached_tokens"] for r in m_on.requests]
+    assert sum(1 for c in cached if c > 0) >= 2
+    assert all(c % 4 == 0 for c in cached)   # whole blocks only
+
+
+def test_engine_reclaimed_block_reuse_does_not_corrupt_live_slots(dense_setup):
+    """An LRU-reclaimed cached block re-enters the free list and is handed
+    to a later admission while another request is mid-decode; every
+    request — including the one spanning the reclaim — must still produce
+    its cache-off tokens."""
+    cfg, mesh, params = dense_setup
+    spec = [(8, 2), (8, 6), (8, 2), (8, 2)]  # distinct prompts, no sharing
+    kw = dict(num_slots=2, max_len=20, prompt_pad=8, kv_block_size=4,
+              num_kv_blocks=9, prefill_chunk=8)
+
+    def run(prefix):
+        with use_context(plan_cache=PlanCache()):
+            e = ServeEngine(cfg, mesh, params, prefix_cache=prefix, **kw)
+            e.plan_warmup()
+            m = e.run(_requests(spec))
+        return ({st.request.prompt.tobytes(): st.tokens
+                 for st in e.finished}, m)
+
+    off, _ = run(False)
+    on, m = run(True)
+    assert on == off
+    assert m.prefix_cache["reclaimed_blocks"] > 0   # pressure actually hit
+    assert m.plan_cache["steady_state"] is True
+
+
+def test_engine_cache_salt_opt_out(dense_setup):
+    """Identical prompts under distinct salts never share KV; the same
+    trace without salts does."""
+    cfg, mesh, params = dense_setup
+    header = _prompt(12, seed=9, vocab=cfg.vocab_size)
+
+    def run(salts):
+        reqs = [Request(prompt=header.copy(), max_new_tokens=3,
+                        cache_salt=s) for s in salts]
+        with use_context(plan_cache=PlanCache()):
+            e = ServeEngine(cfg, mesh, params, num_slots=1, max_len=16,
+                            prompt_pad=12, kv_block_size=4, num_kv_blocks=20,
+                            prefill_chunk=8, prefix_cache=True)
+            e.plan_warmup()
+            m = e.run(reqs)
+        return m, [st.tokens for st in e.finished]
+
+    m_iso, toks_iso = run(["a", "b", "c"])
+    assert m_iso.prefix_cache["hit_tokens"] == 0
+    m_shared, toks_shared = run([None, None, None])
+    assert m_shared.prefix_cache["hit_tokens"] > 0
+    assert toks_iso == toks_shared           # sharing never changes output
+
+
+def test_engine_rejects_prefix_cache_without_paging(dense_setup):
+    cfg, mesh, params = dense_setup
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, mesh, params, num_slots=2, max_len=16,
+                    prompt_pad=8, prefix_cache=True)

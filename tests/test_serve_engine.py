@@ -145,6 +145,37 @@ def test_engine_metrics_export(dense_setup, tmp_path):
         assert r["ttft_s"] is not None and r["ttft_s"] >= 0
         assert r["per_token_s"] > 0
         assert r["finish_reason"] in ("stop", "length")
+        assert r["cached_tokens"] == 0       # no prefix cache on this engine
+    assert d["prefix_cache"] == {}           # section always exported
+    assert d["plan_cache"]["steady_state"] is True
+
+
+def test_engine_metrics_prefix_cache_schema(dense_setup, tmp_path):
+    """Schema check for the prefix_cache section (docs/serving.md): every
+    counter the CI smoke asserts on is present and consistent."""
+    cfg, mesh, params = dense_setup
+    engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=16,
+                         prompt_pad=8, kv_block_size=4, num_kv_blocks=33,
+                         prefix_cache=True, prefix_cache_blocks=8)
+    engine.plan_warmup()
+    m = engine.run(_requests([(8, 4), (4, 2), (6, 3)]))
+    d = json.loads(m.to_json(str(tmp_path / "metrics.json")))
+    assert d["engine"]["prefix_cache"] is True
+    assert d["engine"]["prefix_cache_blocks"] == 8
+    px = d["prefix_cache"]
+    for key in ("lookups", "lookup_tokens", "hits", "hit_tokens", "hit_rate",
+                "inserted_blocks", "duplicate_blocks", "cached_blocks",
+                "cached_idle_blocks", "reclaimed_blocks", "trimmed_blocks",
+                "max_cached_blocks"):
+        assert key in px, key
+    assert px["lookups"] == 3
+    assert px["lookup_tokens"] == 18
+    assert 0.0 <= px["hit_rate"] <= 1.0
+    assert px["inserted_blocks"] >= 1        # the 8- and 4-token prompts
+    assert px["max_cached_blocks"] == 8
+    bp = d["block_pool"]
+    assert "cached_idle_blocks" in bp and "reclaimed_blocks" in bp
+    assert "increfs" in bp
     assert d["plan_cache"]["steady_state"] is True
 
 
