@@ -44,7 +44,8 @@ from repro import configs as C
 from repro import models
 from repro.core.context import use_context
 from repro.launch.mesh import make_local_mesh
-from repro.serve import ServeEngine, shared_prefix_trace, synthetic_trace
+from repro.serve import (ServeEngine, SimClock, bursty_trace,
+                         shared_prefix_trace, synthetic_trace)
 from repro.train.servestep import make_serve_step
 
 # Big enough that a decode step's GEMMs dominate dispatch overhead on CPU
@@ -76,6 +77,29 @@ PREFIX_MAX_NEW = (8, 4, 6)
 PREFIX_CHUNK = 16
 PREFIX_MAX_LEN = PREFIX_HEADER + max(PREFIX_TAILS) + max(PREFIX_MAX_NEW) + 1
 PREFIX_KV_BLOCKS = 61   # roomy: the prefix runs measure dedup, not OOM
+# SLO pair: one bursty mixed trace, FIFO vs EDF under the deterministic
+# SimClock. Interactive requests (priority 2) carry a *loose* deadline —
+# it is an ordering/urgency signal for EDF, never actually missed, so
+# both policies finish every request and total tokens are identical; the
+# background class (no deadline, 24-32 token prompts and budgets) is what
+# interactive traffic queues behind under FIFO. Two lanes, pool sized so
+# two background residents leave room for one interactive — EDF must
+# *preempt* a background decode to admit a late interactive burst.
+SLO_N = 16
+SLO_BURST = 4
+SLO_GAP_S = 0.05
+SLO_DT = 1e-3
+SLO_CLASSES = [
+    dict(priority=2, prompt_lens=(6, 8), max_new_tokens=(4, 6),
+         deadline_slack_s=30.0, weight=1.0),
+    dict(priority=0, prompt_lens=(24, 32), max_new_tokens=(24, 32),
+         deadline_slack_s=None, weight=1.0),
+]
+SLO_SLOTS = 2
+SLO_PROMPT_PAD = 32
+SLO_MAX_LEN = 32 + 32 + 1
+SLO_KV_BLOCKS = 21
+SLO_CHUNK = 16
 
 
 def bench_config():
@@ -216,6 +240,52 @@ def run_prefix_pair(cfg, mesh, params) -> dict:
     }
 
 
+def _slo_trace(cfg):
+    return bursty_trace(SLO_N, vocab_size=cfg.vocab_size,
+                        burst_size=SLO_BURST, burst_gap_s=SLO_GAP_S,
+                        classes=SLO_CLASSES, seed=0)
+
+
+def run_slo_pair(cfg, mesh, params) -> dict:
+    """The bursty mixed-priority trace under FIFO, then EDF — identical
+    engines otherwise (paged + prefix cache, SimClock). EDF must admit
+    interactive traffic ahead of (and by preempting) background decodes:
+    high-priority p99 TTFT drops, while useful tokens are identical and
+    the tick count stays within 5% (preempt/resume overhead is bounded by
+    the trie handing the victim its written blocks back)."""
+    common = dict(num_slots=SLO_SLOTS, max_len=SLO_MAX_LEN,
+                  prompt_pad=SLO_PROMPT_PAD, kv_block_size=KV_BLOCK,
+                  num_kv_blocks=SLO_KV_BLOCKS, prefill_chunk=SLO_CHUNK,
+                  prefix_cache=True)
+    out = {}
+    for policy in ("fifo", "edf"):
+        engine = ServeEngine(cfg, mesh, params, sched_policy=policy,
+                             clock=SimClock(SLO_DT), **common)
+        warm = engine.plan_warmup()
+        r = _engine_result(engine, cfg, warm, trace_fn=_slo_trace)
+        d = r["metrics"]
+        r["slo"] = d["slo"]
+        r["preemptions"] = d["aggregate"]["preemptions"]
+        r["resumes"] = d["aggregate"]["resumes"]
+        r["deadline_missed"] = d["aggregate"]["deadline_missed"]
+        out[policy] = r
+    fifo, edf = out["fifo"], out["edf"]
+    hi = str(max(c["priority"] for c in SLO_CLASSES))
+    return {
+        **out,
+        "hi_class": hi,
+        "hi_p99_ttft_ticks_fifo": fifo["slo"][hi]["p99_ttft_ticks"],
+        "hi_p99_ttft_ticks_edf": edf["slo"][hi]["p99_ttft_ticks"],
+        "token_match": edf["tokens_by_request"] == fifo["tokens_by_request"],
+        "ticks_ratio": edf["ticks"] / fifo["ticks"],
+        "miss_rate_by_class": {
+            p: {"fifo": fifo["slo"][p]["miss_rate"],
+                "edf": edf["slo"][p]["miss_rate"]}
+            for p in fifo["slo"]},
+        "requests": SLO_N,
+    }
+
+
 def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
     cfg = bench_config()
     mesh = make_local_mesh()
@@ -225,6 +295,7 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
         engine = run_engine(cfg, mesh, params)
         paged = run_paged(cfg, mesh, params)
         prefix = run_prefix_pair(cfg, mesh, params)
+        slo = run_slo_pair(cfg, mesh, params)
     speedup = engine["tokens_per_sec"] / static["tokens_per_sec"]
     token_match = (paged["tokens_by_request"] == engine["tokens_by_request"])
     mem_ratio = paged["block_pool"]["memory_ratio"]
@@ -246,10 +317,20 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
          f"prefill={prefix['prefilled_tokens']}/{prefix['prompt_tokens']} "
          f"(-{prefix['prefill_reduction']:.0%}) match={prefix['token_match']} "
          f"steady={prefix['on']['plan_cache']['steady_state']}")
-    for r in (engine, paged, prefix["off"], prefix["on"]):
+    hi = slo["hi_class"]
+    p99_f, p99_e = (slo["hi_p99_ttft_ticks_fifo"],
+                    slo["hi_p99_ttft_ticks_edf"])
+    emit(f"serve/slo,{slo['edf']['wall_s']*1e6/slo['edf']['useful_tokens']:.1f},"
+         f"hi_p99_ttft={p99_f:.0f}->{p99_e:.0f}ticks "
+         f"preempt={slo['edf']['preemptions']} "
+         f"resume={slo['edf']['resumes']} "
+         f"match={slo['token_match']} ticks={slo['ticks_ratio']:.2f}x "
+         f"steady={slo['edf']['plan_cache']['steady_state']}")
+    for r in (engine, paged, prefix["off"], prefix["on"],
+              slo["fifo"], slo["edf"]):
         r.pop("tokens_by_request")  # parity input, noise in the JSON
     result = {"static": static, "engine": engine, "paged": paged,
-              "prefix": prefix,
+              "prefix": prefix, "slo": slo,
               "speedup": speedup, "paged_token_match": token_match,
               "paged_memory_ratio": mem_ratio,
               "prefix_token_match": prefix["token_match"],
@@ -288,6 +369,23 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
                 f"the shared-header trace (need >= 50%)")
         if not prefix["on"]["plan_cache"]["steady_state"]:
             raise SystemExit("prefix-cache engine loop was not plan-warm")
+        if not (slo["fifo"]["plan_cache"]["steady_state"]
+                and slo["edf"]["plan_cache"]["steady_state"]):
+            raise SystemExit("an SLO-pair engine loop was not plan-warm")
+        if slo["edf"]["preemptions"] < 1:
+            raise SystemExit("EDF never preempted on the bursty trace — "
+                             "the preemption path went unexercised")
+        if not slo["token_match"]:
+            raise SystemExit("EDF run diverged from FIFO per-request "
+                             "(preempt/resume broke token parity)")
+        if not p99_e < p99_f:
+            raise SystemExit(
+                f"EDF did not reduce high-priority p99 TTFT: "
+                f"{p99_f:.0f} -> {p99_e:.0f} ticks")
+        if abs(slo["ticks_ratio"] - 1.0) > 0.05:
+            raise SystemExit(
+                f"SLO policies diverged in total work: EDF took "
+                f"{slo['ticks_ratio']:.2f}x FIFO's ticks (bound: 5%)")
     return result
 
 

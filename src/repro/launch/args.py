@@ -94,6 +94,40 @@ def add_serve_engine_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
              "trimmed past it; default: unbounded — cached-idle blocks "
              "are reclaimed on demand before the pool reports OOM)")
     g.add_argument(
+        "--sched-policy", default="fifo",
+        choices=["fifo", "priority", "edf", "prefix"],
+        help="admission-ordering policy (serve/policy.py). priority/edf "
+             "preempt lower-ranked decodes under lane/block pressure "
+             "(paged engine only); prefix admits the longest cached "
+             "prefix first (pairs with --prefix-cache)")
+    g.add_argument(
+        "--ttft-target-ms", type=float, default=None, metavar="MS",
+        help="TTFT SLO target for the dynamic prefill/decode budget: the "
+             "engine adapts prefill chunks per tick (1..--max-prefill-"
+             "chunks) from observed submit-to-first-token EWMA vs this "
+             "target (default: off — fixed 1 chunk/tick)")
+    g.add_argument(
+        "--max-prefill-chunks", type=int, default=4, metavar="N",
+        help="budget controller ceiling: at most N prefill chunks per "
+             "tick (default 4)")
+    g.add_argument(
+        "--sim-clock", type=float, default=None, metavar="DT",
+        help="drive the engine with a deterministic simulated clock "
+             "advancing DT seconds per reading instead of wall time "
+             "(reproducible TTFT/deadline metrics; benchmarks and CI)")
+    g.add_argument(
+        "--bursty-trace", action="store_true",
+        help="use the seeded bursty mixed-priority trace (interactive "
+             "high-priority + background low-priority classes, arrivals "
+             "in bursts) instead of the uniform synthetic trace — the "
+             "traffic shape --sched-policy exists for")
+    g.add_argument(
+        "--burst-size", type=int, default=4, metavar="N",
+        help="requests per burst in --bursty-trace (default 4)")
+    g.add_argument(
+        "--burst-gap-s", type=float, default=0.05, metavar="S",
+        help="gap between bursts on the engine clock (default 0.05)")
+    g.add_argument(
         "--temperature", type=float, default=0.0, metavar="T",
         help="sampling temperature (0 = greedy; host-side, per-request "
              "seeded streams)")

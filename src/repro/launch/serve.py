@@ -126,17 +126,41 @@ def _measure_plans(ctx, args) -> None:
 def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
     """--engine: continuous batching over a mixed-length synthetic trace
     (with --prefix-cache: a shared-header trace, so the radix cache has
-    prefixes to dedupe)."""
-    from repro.serve import ServeEngine, shared_prefix_trace, synthetic_trace
+    prefixes to dedupe; with --bursty-trace: bursts of mixed-priority
+    traffic, the shape --sched-policy and --ttft-target-ms exist for)."""
+    from repro.serve import (ServeEngine, SimClock, bursty_trace,
+                             shared_prefix_trace, synthetic_trace)
 
     if args.prefix_cache and not args.kv_block_size:
         raise SystemExit("--prefix-cache needs the paged engine: pass "
                          "--kv-block-size too")
+    if args.sched_policy in ("priority", "edf") and not args.kv_block_size:
+        raise SystemExit(f"--sched-policy {args.sched_policy} preempts via "
+                         "the paged pool: pass --kv-block-size too")
     gen = args.max_new_tokens or args.gen
     plen = args.prompt_len
     stop = (args.eos_id,) if args.eos_id is not None else ()
     n_requests = max(args.batch, 2 * args.num_slots)
-    if args.prefix_cache:
+    prompt_pad = plen
+    if args.bursty_trace:
+        # interactive class: short prompts, short answers, a deadline a
+        # few bursts out; background class: long prompts, long answers,
+        # no deadline — one queue, mixed
+        header = plen if args.prefix_cache else 0
+        classes = [
+            dict(priority=2, prompt_lens=(max(1, plen // 2), plen),
+                 max_new_tokens=(max(1, gen // 4), max(1, gen // 2)),
+                 deadline_slack_s=10 * args.burst_gap_s, weight=1.0),
+            dict(priority=0, prompt_lens=(2 * plen,),
+                 max_new_tokens=(gen,), deadline_slack_s=None, weight=1.0),
+        ]
+        trace = bursty_trace(
+            n_requests, vocab_size=cfg.vocab_size,
+            burst_size=args.burst_size, burst_gap_s=args.burst_gap_s,
+            classes=classes, header_len=header, stop_ids=stop, seed=0)
+        prompt_pad = header + 2 * plen
+        max_len = prompt_pad + gen + 1
+    elif args.prefix_cache:
         # every request repeats a plen-token header + a short unique tail
         tails = [1, 3, 5]
         trace = shared_prefix_trace(
@@ -154,13 +178,17 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
         max_len = plen + gen + 1
     engine = ServeEngine(
         cfg, mesh, params, num_slots=args.num_slots,
-        max_len=max_len, prompt_pad=plen, param_axes=param_axes,
+        max_len=max_len, prompt_pad=prompt_pad, param_axes=param_axes,
         kv_block_size=args.kv_block_size or None,
         num_kv_blocks=args.num_kv_blocks,
         prefill_chunk=args.prefill_chunk,
         prefix_cache=args.prefix_cache,
         prefix_cache_blocks=args.prefix_cache_blocks,
-        temperature=args.temperature, top_p=args.top_p)
+        temperature=args.temperature, top_p=args.top_p,
+        sched_policy=args.sched_policy,
+        ttft_target_ms=args.ttft_target_ms,
+        max_prefill_chunks=args.max_prefill_chunks,
+        clock=(SimClock(args.sim_clock) if args.sim_clock else None))
     if not args.no_warmup:
         t0 = time.perf_counter()
         warm = engine.plan_warmup()
@@ -191,6 +219,27 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
               f"prompt tokens ({px['hit_rate']:.2f} hit rate), "
               f"{px['inserted_blocks']} blocks cached, "
               f"{px['reclaimed_blocks']} reclaimed")
+    if m.policy != "fifo" or m.preemptions or m.deadline_missed:
+        print(f"[sched] policy={m.policy} preemptions={m.preemptions} "
+              f"resumes={m.resumes} deadline_missed={m.deadline_missed} "
+              f"deferred={m.deferred_admissions}")
+        for prio, s in m.slo_summary().items():
+            p99t = s["p99_ttft_ticks"]
+            print(f"[slo] priority={prio}: n={s['n']} "
+                  f"finished={s['finished']} "
+                  f"missed={s['deadline_missed']} "
+                  f"(rate {s['miss_rate']:.2f}), "
+                  f"p99 ttft "
+                  + (f"{p99t:.0f} ticks" if p99t is not None else "n/a")
+                  + f", {s['preemptions']} preemptions")
+    if m.budget.get("target_ttft_s"):
+        b = m.budget
+        print(f"[budget] target {1e3 * b['target_ttft_s']:.1f}ms: "
+              f"{b['observations']} TTFT observations, ema "
+              + (f"{1e3 * b['ema_ttft_s']:.1f}ms"
+                 if b["ema_ttft_s"] is not None else "n/a")
+              + f", {b['raises']} raises / {b['drops']} drops, final "
+              f"{b['final_chunks']} chunks/tick")
     pc = m.plan_cache
     print(f"[plan-cache] serving: hits={pc['hits']} misses={pc['misses']} "
           f"lazy_solves={pc['lazy_solves']} "

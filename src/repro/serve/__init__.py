@@ -7,19 +7,28 @@ maps one onto the other through ``num_slots`` decode lanes — with paged KV
 (``blockpool``), the lanes' cache is a block pool indexed per-slot block
 tables and prompts prefill chunk by chunk; ``prefixcache`` deduplicates
 shared prompt prefixes across requests over those same block tables
-(ref-counted blocks, radix-trie index, LRU reclaim); ``engine`` runs the
-tick loop and ``metrics`` reports it.
+(ref-counted blocks, radix-trie index, LRU reclaim); ``policy`` orders
+admission (fifo/priority/edf/prefix), preempts lower-ranked decodes under
+pressure and adapts the per-tick prefill budget to a TTFT target;
+``engine`` runs the tick loop and ``metrics`` reports it.
 """
 from repro.serve.blockpool import BlockPool, blocks_for
 from repro.serve.engine import ServeEngine, chunk_buckets
 from repro.serve.metrics import EngineMetrics
+from repro.serve.policy import (POLICIES, BudgetController, EdfPolicy,
+                                FifoPolicy, PrefixAffinityPolicy,
+                                PriorityPolicy, SchedPolicy, SimClock,
+                                get_policy)
 from repro.serve.prefixcache import PrefixCache
-from repro.serve.request import (Request, RequestState, shared_prefix_trace,
-                                 synthetic_trace)
+from repro.serve.request import (Request, RequestState, bursty_trace,
+                                 shared_prefix_trace, synthetic_trace)
 from repro.serve.scheduler import SlotScheduler
 
 __all__ = [
     "ServeEngine", "EngineMetrics", "Request", "RequestState",
     "SlotScheduler", "BlockPool", "PrefixCache", "blocks_for",
     "chunk_buckets", "synthetic_trace", "shared_prefix_trace",
+    "bursty_trace", "SchedPolicy", "FifoPolicy", "PriorityPolicy",
+    "EdfPolicy", "PrefixAffinityPolicy", "POLICIES", "get_policy",
+    "BudgetController", "SimClock",
 ]

@@ -15,6 +15,13 @@ compiled step functions (device-side, fixed shapes):
   the running batch;
 * eviction on stop-id / max-new-tokens frees the lane (and, paged, returns
   the request's blocks to the pool) for the queue head;
+* admission order is a pluggable policy (``sched_policy``: fifo /
+  priority / edf / prefix — serve/policy.py); preemptive policies evict
+  and requeue strictly lower-ranked decodes under lane/block pressure,
+  and resumed requests re-prefill only what the prefix trie no longer
+  holds. A per-tick **prefill budget** (``ttft_target_ms``) adapts how
+  many chunked-prefill calls run per tick from observed TTFT — all of it
+  host-side policy code over the same warm chunk-bucket signatures;
 * with the **prefix cache** on (``prefix_cache=True``, paged only),
   admission first maps any cached prompt prefix's blocks straight into the
   slot's block table — chunked prefill then starts at the first uncached
@@ -48,6 +55,7 @@ from repro.configs.base import ModelConfig
 from repro.core.context import current_context
 from repro.serve.blockpool import BlockPool
 from repro.serve.metrics import EngineMetrics
+from repro.serve.policy import BudgetController, SchedPolicy, get_policy
 from repro.serve.prefixcache import PrefixCache
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
@@ -84,6 +92,10 @@ class ServeEngine:
         temperature: float = 0.0,
         top_p: float = 1.0,
         seed: int = 0,
+        sched_policy: str | SchedPolicy | None = None,
+        ttft_target_ms: float | None = None,
+        max_prefill_chunks: int = 4,
+        clock=None,
     ):
         self.cfg = cfg
         self.mesh = mesh
@@ -95,11 +107,22 @@ class ServeEngine:
         self.temperature = temperature
         self.top_p = top_p
         self.seed = seed
+        self.sched_policy = get_policy(sched_policy)
+        self.ttft_target_ms = ttft_target_ms
+        self.max_prefill_chunks = max_prefill_chunks
+        # injectable clock (policy.SimClock in tests/benchmarks): TTFT,
+        # deadlines and burst arrivals become deterministic functions of
+        # the event sequence
+        self._now = clock if clock is not None else time.perf_counter
         self.paged = bool(kv_block_size)
         if prefix_cache and not self.paged:
             raise ValueError(
                 "the prefix cache shares KV at block granularity — it "
                 "needs the paged engine (kv_block_size)")
+        if self.sched_policy.preemptive and not self.paged:
+            raise ValueError(
+                f"policy {self.sched_policy.name!r} preempts via block "
+                f"refcounts — it needs the paged engine (kv_block_size)")
         self.prefix_cache_enabled = bool(prefix_cache)
         self.prefix_cache_blocks = prefix_cache_blocks
         param_shapes = (None if param_axes is None
@@ -140,11 +163,21 @@ class ServeEngine:
         self._warmed = False
         self.reset()
 
+    def _rel_now(self) -> float:
+        """Seconds on the engine clock since the last reset — the time
+        base every stamp, deadline and ``arrival_s`` lives in."""
+        return self._now() - self._t0
+
     # ------------------------------------------------------------ state
     def reset(self) -> None:
         """Fresh scheduler/state/metrics; compiled functions are kept (the
         benchmark times a second run to measure steady state, not XLA)."""
         ctx = current_context()
+        # the engine's time base: every stamp (submit, admission, TTFT,
+        # deadlines, trace arrival_s) is seconds since this reset, so
+        # absolute deadline_s/arrival_s values in a trace mean what they
+        # say regardless of the clock's epoch
+        self._t0 = self._now()
         with self.mesh:
             self.state = self._init_fn()
         pool = (BlockPool(self.num_kv_blocks, self.kv_block_size)
@@ -152,7 +185,12 @@ class ServeEngine:
         cache = (PrefixCache(pool, max_cached_blocks=self.prefix_cache_blocks)
                  if self.prefix_cache_enabled else None)
         self.sched = SlotScheduler(self.num_slots, max_len=self.max_len,
-                                   pool=pool, prefix_cache=cache)
+                                   pool=pool, prefix_cache=cache,
+                                   policy=self.sched_policy)
+        self.budget = BudgetController(
+            None if self.ttft_target_ms is None
+            else self.ttft_target_ms / 1e3,
+            max_chunks=self.max_prefill_chunks)
         self._next_tok = np.full((self.num_slots,), self.pad_id, np.int64)
         engine_info = {
             "arch": self.cfg.name,
@@ -165,6 +203,8 @@ class ServeEngine:
             "paged": self.paged,
             "temperature": self.temperature,
             "top_p": self.top_p,
+            "sched_policy": self.sched_policy.name,
+            "ttft_target_ms": self.ttft_target_ms,
         }
         if self.paged:
             engine_info.update(
@@ -211,12 +251,13 @@ class ServeEngine:
                 "from_cache": signatures - solved}
 
     # ------------------------------------------------------------ intake
-    def submit(self, request: Request) -> Request:
+    def submit(self, request: Request, now_s: float | None = None) -> Request:
         if not self.paged and request.prompt_len > self.prompt_pad:
             raise ValueError(
                 f"prompt_len={request.prompt_len} exceeds the engine's "
                 f"prompt_pad={self.prompt_pad}")
-        return self.sched.submit(request)
+        return self.sched.submit(
+            request, now_s if now_s is not None else self._rel_now())
 
     # ------------------------------------------------------------ sampling
     def _sample(self, logits_row: np.ndarray, st: RequestState) -> int:
@@ -263,9 +304,16 @@ class ServeEngine:
 
     def _first_token(self, st: RequestState, logits: np.ndarray,
                      now: float) -> None:
-        """Record the first token falling out of a completed prefill."""
+        """Record the first token falling out of a completed prefill.
+
+        A resumed prefill also lands here (its final chunk's logits yield
+        the next token of the stream) — only a genuinely first token
+        feeds the budget controller's TTFT loop."""
+        first_ever = st.first_token_s is None
         tok = self._sample(logits, st)
-        st.append(tok, now)
+        st.append(tok, now, tick=self.sched.tick)
+        if first_ever:
+            self.budget.observe_ttft(now - st.request.submitted_s)
         self._next_tok[st.slot] = tok
         reason = ("length" if len(st.tokens) >= self._budget(st)
                   else st.should_stop())
@@ -289,7 +337,7 @@ class ServeEngine:
                 self.params, self.state, jnp.asarray(prompt),
                 jnp.asarray(st.slot, jnp.int32),
                 jnp.asarray(req.prompt_len, jnp.int32))
-            self._first_token(st, np.asarray(logits), time.perf_counter())
+            self._first_token(st, np.asarray(logits), self._rel_now())
 
     def _bind_admissions(self, now: float) -> int:
         """Paged path: bind queue heads to free lanes + allocate their KV
@@ -311,16 +359,19 @@ class ServeEngine:
 
     def _prefill_tick(self, now: float) -> int:
         """Run ONE chunked-prefill step for the oldest mid-prefill lane.
-        The final chunk yields the request's first token. Returns tokens
-        produced (0 or 1)."""
+        The final chunk yields the request's first token (or, resumed, the
+        next token of the stream). Returns tokens produced (0 or 1)."""
         st = self.sched.prefill_head()
         if st is None:
             return 0
-        req = st.request
+        # the prefill sequence is the admission snapshot: the bare prompt
+        # for a fresh request, prompt + generated-so-far for a resume
+        seq = (st.prefill_tokens if st.prefill_tokens is not None
+               else st.request.prompt)
         start = st.prefill_done
-        bucket, n = self._chunk_shape(req.prompt_len - start)
+        bucket, n = self._chunk_shape(st._target - start)
         chunk = np.full((1, bucket), self.pad_id, np.int32)
-        chunk[0, :n] = req.prompt[start: start + n]
+        chunk[0, :n] = seq[start: start + n]
         blocks = np.zeros((self.art.max_blocks,), np.int32)
         blocks[: len(st.blocks)] = st.blocks
         logits, self.state = self.art.prefill_fn(
@@ -332,17 +383,27 @@ class ServeEngine:
         self.sched.prefill_advance(st.slot, n)
         if st.prefilling:
             return 0
-        self._first_token(st, np.asarray(logits), time.perf_counter())
+        self._first_token(st, np.asarray(logits), self._rel_now())
         return 1
 
     def tick(self) -> int:
-        """One engine tick: admissions (plus, paged, at most one prefill
-        chunk), then one masked decode step for the decode-ready lanes.
-        Returns the number of tokens generated."""
-        now = time.perf_counter()
+        """One engine tick: deadline sweep, admissions (plus, paged, up to
+        ``budget.chunks_per_tick()`` prefill chunks), then one masked
+        decode step for the decode-ready lanes. Returns the number of
+        tokens generated."""
+        now = self._rel_now()
+        for st in self.sched.expire_deadlines(now):
+            self.metrics.record_request(st)
         if self.paged:
             self._bind_admissions(now)
-            produced = self._prefill_tick(now)
+            produced = 0
+            # the budget controller's knob: how much of this tick goes to
+            # prefill (TTFT) vs decode (throughput). Same warm chunk
+            # signatures either way — only the count changes.
+            for _ in range(self.budget.chunks_per_tick()):
+                if self.sched.prefill_head() is None:
+                    break
+                produced += self._prefill_tick(now)
         else:
             produced = self._admit_all(now)
         mask = self.sched.decode_mask()
@@ -354,11 +415,11 @@ class ServeEngine:
                 jnp.asarray(toks[:, None], jnp.int32),
                 jnp.asarray(mask, jnp.int32))
             np_logits = np.asarray(logits)
-            now = time.perf_counter()
+            now = self._rel_now()
             for slot in np.flatnonzero(mask):
                 st = self.sched.slots[slot]
                 tok = self._sample(np_logits[slot], st)
-                st.append(tok, now)
+                st.append(tok, now, tick=self.sched.tick)
                 self._next_tok[slot] = tok
                 produced += 1
                 reason = ("length" if len(st.tokens) >= self._budget(st)
@@ -379,27 +440,49 @@ class ServeEngine:
 
     # ------------------------------------------------------------ driving
     def run(self, requests: Iterable[Request] = ()) -> EngineMetrics:
-        """Submit ``requests``, run ticks until queue and lanes drain, and
-        return the filled metrics. After ``plan_warmup`` the whole loop runs
-        under the zero-lazy-solve steady-state assertion."""
-        for r in requests:
-            self.submit(r)
+        """Run ``requests`` to completion and return the filled metrics.
+
+        Arrival-aware: a request is submitted once the engine clock
+        reaches its ``arrival_s`` (0.0, the default, submits before the
+        first tick — the pre-SLO behavior), so bursty traces replay with
+        their gaps. A request whose deadline passed while it waited to
+        arrive is terminal-missed without ever queueing. After
+        ``plan_warmup`` the whole loop runs under the zero-lazy-solve
+        steady-state assertion."""
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.request_id))
         cache = current_context().plan_cache
         before = cache.stats.snapshot()
-        t0 = time.perf_counter()
+        t_start = self._rel_now()
+
+        def step():
+            now = self._rel_now()
+            while pending and pending[0].arrival_s <= now:
+                r = pending.pop(0)
+                if r.deadline_s is not None and r.deadline_s <= now:
+                    self.metrics.record_request(
+                        self.sched.drop_expired(r, now))
+                else:
+                    self.sched.submit(r, now)
+            self.tick()
+
         if self._warmed:
             with cache.expect_steady_state("serve-engine loop"):
-                while not self.sched.idle:
-                    self.tick()
+                while pending or not self.sched.idle:
+                    step()
         else:
-            while not self.sched.idle:
-                self.tick()
-        self.metrics.wall_s = time.perf_counter() - t0
+            while pending or not self.sched.idle:
+                step()
+        self.metrics.wall_s = self._rel_now() - t_start
         self.metrics.record_plan_cache(before, cache.stats.snapshot())
         counters = self.sched.counters()
         self.metrics.admissions = counters["admissions"]
         self.metrics.evictions = counters["evictions"]
         self.metrics.deferred_admissions = counters["deferred_admissions"]
+        self.metrics.preemptions = counters["preemptions"]
+        self.metrics.resumes = counters["resumes"]
+        self.metrics.deadline_missed = counters["deadline_missed"]
+        self.metrics.policy = counters["policy"]
+        self.metrics.budget = self.budget.stats()
         if self.sched.prefix_cache is not None:
             self.metrics.record_prefix_cache(self.sched.prefix_cache)
         return self.metrics

@@ -11,10 +11,17 @@ Schema (``EngineMetrics.to_dict``, documented in docs/serving.md):
               prefix_cache, prefix_cache_blocks]},
   "aggregate": {wall_s, ticks, generated_tokens, tokens_per_sec,
                 mean_occupancy, admissions, deferred_admissions,
-                evictions{reason: n}, queue_peak},
-  "requests": [{request_id, prompt_len, cached_tokens, tokens, ttft_s,
-                total_s, per_token_s, finish_reason, admitted_tick,
-                finished_tick}],
+                evictions{finished{reason: n}, preempted, deadline_missed},
+                preemptions, resumes, deadline_missed, policy, queue_peak},
+  "requests": [{request_id, priority, deadline_s, prompt_len,
+                cached_tokens, tokens, queue_s, ttft_s, ttft_ticks,
+                total_s, per_token_s, preemptions, finish_reason,
+                arrival_tick, admitted_tick, finished_tick}],
+  "slo": {"<priority>": {n, finished, deadline_missed, miss_rate,
+                         preemptions, p50_ttft_s, p99_ttft_s,
+                         p50_ttft_ticks, p99_ttft_ticks}},
+  "budget": {target_ttft_s, min_chunks, max_chunks, final_chunks,
+             raises, drops, observations, ema_ttft_s},
   "block_pool": {num_blocks, block_size, peak_in_use, peak_utilization,
                  peak_fragmentation_tokens, pool_tokens, contiguous_tokens,
                  memory_ratio, allocs, frees, failed_allocs, increfs,
@@ -41,15 +48,30 @@ not a pressure signal. ``block_pool.reclaimed_blocks`` is their sum
 contiguous layout's ``num_slots * max_len`` — the footprint the block-table
 refactor exists to shrink (the benchmark asserts <= 0.5x).
 
-TTFT here is admission-to-first-token (the first token falls out of the
-admission prefill itself); queueing delay is visible separately as
-``admitted_tick - arrival_tick``.
+Two TTFT views coexist: per-request ``ttft_s`` is admission-to-first-token
+(the first token falls out of the admission prefill itself) with queueing
+delay separately as ``queue_s`` (submit to admission); the ``slo`` section
+uses the *user-visible* latency — submit to first token, ``queue_s +
+ttft_s``, and its deterministic twin ``ttft_ticks`` (first_token_tick -
+arrival_tick), which is what the FIFO-vs-EDF benchmark compares (p99 in
+ticks is exact under SimClock; seconds wobble with the host). ``slo`` is
+keyed by priority class and reports the deadline-miss rate per class —
+misses include requests cancelled before ever being admitted.
+
+``evictions`` separates causes: ``finished`` (terminal, by finish
+reason), ``preempted`` (requeued — the lane was taken by a higher-ranked
+request and the victim resumes later) and ``deadline_missed`` (terminal).
+``preemptions >= resumes`` always; they differ only for requests still
+paused when the run drained (impossible in ``run()``, which runs to
+idle).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 from typing import Any
+
+import numpy as np
 
 from repro.core.plancache import PlanCacheStats
 from repro.serve.request import RequestState
@@ -65,7 +87,12 @@ class EngineMetrics:
     queue_peak: int = 0
     admissions: int = 0
     deferred_admissions: int = 0
-    evictions: dict[str, int] = dataclasses.field(default_factory=dict)
+    evictions: dict[str, Any] = dataclasses.field(default_factory=dict)
+    preemptions: int = 0
+    resumes: int = 0
+    deadline_missed: int = 0
+    policy: str = "fifo"
+    budget: dict[str, Any] = dataclasses.field(default_factory=dict)
     requests: list[dict[str, Any]] = dataclasses.field(default_factory=list)
     block_pool: dict[str, Any] = dataclasses.field(default_factory=dict)
     prefix_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -81,18 +108,30 @@ class EngineMetrics:
 
     def record_request(self, st: RequestState) -> None:
         req = st.request
-        total_s = (None if st.finished_s is None
+        # admitted_tick == -1: a deadline miss that never reached a lane
+        # (dropped from the queue, or expired before it could arrive) —
+        # it has no admission, TTFT or queueing delay, only a finish
+        admitted = st.admitted_tick >= 0
+        total_s = (None if st.finished_s is None or not admitted
                    else st.finished_s - st.admitted_s)
         n = len(st.tokens)
         self.requests.append({
             "request_id": req.request_id,
+            "priority": req.priority,
+            "deadline_s": req.deadline_s,
             "prompt_len": req.prompt_len,
             "cached_tokens": st.cached_tokens,
             "tokens": n,
-            "ttft_s": (None if st.first_token_s is None
+            "queue_s": (st.admitted_s - req.submitted_s if admitted
+                        else None),
+            "ttft_s": (None if st.first_token_s is None or not admitted
                        else st.first_token_s - st.admitted_s),
+            "ttft_ticks": (None if st.first_token_tick is None
+                           or req.arrival_tick < 0
+                           else st.first_token_tick - req.arrival_tick),
             "total_s": total_s,
             "per_token_s": (total_s / n if total_s is not None and n else None),
+            "preemptions": st.preemptions,
             "finish_reason": st.finish_reason,
             "arrival_tick": req.arrival_tick,
             "admitted_tick": st.admitted_tick,
@@ -132,6 +171,40 @@ class EngineMetrics:
         }
 
     # ------------------------------------------------------------ export
+    def slo_summary(self) -> dict[str, Any]:
+        """Per-priority-class SLO rollup over the recorded requests.
+
+        TTFT here is the user-visible submit→first-token latency (queueing
+        included); ``*_ticks`` is its deterministic engine-tick twin —
+        exact under SimClock, so benchmarks/CI gate on it. Requests that
+        never produced a token (deadline-missed in the queue) have no
+        TTFT sample but do count toward ``miss_rate``."""
+        by_prio: dict[int, list[dict]] = {}
+        for r in self.requests:
+            by_prio.setdefault(int(r["priority"]), []).append(r)
+        out: dict[str, Any] = {}
+        for prio in sorted(by_prio):
+            rs = by_prio[prio]
+            ttft_s = [r["queue_s"] + r["ttft_s"] for r in rs
+                      if r["queue_s"] is not None and r["ttft_s"] is not None]
+            ticks = [r["ttft_ticks"] for r in rs
+                     if r["ttft_ticks"] is not None]
+            missed = sum(r["finish_reason"] == "deadline_missed" for r in rs)
+            pct = lambda xs, q: (float(np.percentile(xs, q)) if xs else None)
+            out[str(prio)] = {
+                "n": len(rs),
+                "finished": sum(r["finish_reason"] in ("stop", "length")
+                                for r in rs),
+                "deadline_missed": missed,
+                "miss_rate": missed / len(rs) if rs else 0.0,
+                "preemptions": sum(r["preemptions"] for r in rs),
+                "p50_ttft_s": pct(ttft_s, 50),
+                "p99_ttft_s": pct(ttft_s, 99),
+                "p50_ttft_ticks": pct(ticks, 50),
+                "p99_ttft_ticks": pct(ticks, 99),
+            }
+        return out
+
     @property
     def tokens_per_sec(self) -> float:
         return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
@@ -152,9 +225,15 @@ class EngineMetrics:
                 "admissions": self.admissions,
                 "deferred_admissions": self.deferred_admissions,
                 "evictions": dict(self.evictions),
+                "preemptions": self.preemptions,
+                "resumes": self.resumes,
+                "deadline_missed": self.deadline_missed,
+                "policy": self.policy,
                 "queue_peak": self.queue_peak,
             },
             "requests": list(self.requests),
+            "slo": self.slo_summary(),
+            "budget": dict(self.budget),
             "block_pool": dict(self.block_pool),
             "prefix_cache": dict(self.prefix_cache),
             "plan_cache": dict(self.plan_cache),

@@ -123,6 +123,22 @@ class PrefixCache:
         return len(self._nodes)
 
     # ------------------------------------------------------------ match
+    def peek(self, prompt, salt: Hashable = None) -> int:
+        """Cached-prefix length of ``prompt`` in tokens, with no side
+        effects: no increfs, no counter movement, no LRU touch. The
+        prefix-affinity admission policy ranks the queue with this —
+        a ranking probe must not pin blocks or skew hit_rate."""
+        limit = (int(np.asarray(prompt).size) - 1) // self.pool.block_size
+        node = self._root(salt)
+        matched = 0
+        for key in self._block_keys(prompt, limit):
+            child = node.children.get(key)
+            if child is None:
+                break
+            matched += 1
+            node = child
+        return matched * self.pool.block_size
+
     def match(self, prompt, salt: Hashable = None) -> list[int]:
         """Longest cached prefix of ``prompt`` (full blocks only, capped so
         >= 1 token is left to prefill). Matched blocks are increfed — the

@@ -1,47 +1,57 @@
-"""Slot-based scheduler: FIFO admission onto a fixed set of decode lanes.
+"""Slot-based scheduler: policy-ordered admission onto fixed decode lanes.
 
 The engine's decode step is compiled once for ``num_slots`` lanes; the
 scheduler's whole job is to keep that shape true while requests come and go:
 
-* ``submit`` appends to a FIFO queue (arrival order is admission order);
-* ``admit_next`` binds the queue head to the lowest free slot — the engine
-  then prefills the slot's KV (one shot on the contiguous layout, chunk by
-  chunk on the paged one);
-* ``evict`` frees a slot on EOS / max-length so the next queued request can
-  reuse the lane (same buffer, new length — no allocation);
+* ``submit`` validates the request and appends it to the queue;
+* ``admit_next`` binds the request the **admission policy** selects to the
+  lowest free slot — the engine then prefills the slot's KV (one shot on
+  the contiguous layout, chunk by chunk on the paged one);
+* ``evict`` frees a slot on EOS / max-length / deadline expiry so the next
+  queued request can reuse the lane (same buffer, new length — no
+  allocation);
 * ``active_mask`` is the (num_slots,) occupancy; ``decode_mask`` excludes
   lanes whose prompt is still mid-chunked-prefill.
 
+Admission order is a pluggable :class:`repro.serve.policy.SchedPolicy`
+(``--sched-policy``): FIFO (default — arrival order, deferrals included,
+the no-starvation guarantee of the pre-SLO scheduler), priority (highest
+``Request.priority`` first), EDF (earliest ``deadline_s`` first) or
+prefix-affinity (longest cached prompt prefix first). Whatever the
+policy, only ONE candidate is tried per attempt: if its blocks aren't
+there the attempt defers — later arrivals cannot steal from the policy's
+own choice, so the no-starvation property holds *within the policy's
+ordering*.
+
 With a :class:`repro.serve.blockpool.BlockPool` attached, admission also
 allocates the request's KV blocks — the whole prompt *plus* its effective
-generation budget, so a request admitted can always run to completion
-(no mid-flight preemption). When the free list is short the queue head
-simply waits (``deferred_admissions`` counts the stalls); a request whose
-prompt + budget could never fit even an empty pool is refused at submit.
+generation budget, so an admitted request can always run to completion. A
+request whose prompt + budget could never fit even an empty pool is
+refused at submit.
 
-**Admission is strictly FIFO, deferrals included**: only the queue head is
-ever tried, so a deferred head re-checks in arrival order on every tick
-and later arrivals — even ones that would fit the remaining blocks, even
-ones whose prefix is fully cached — cannot steal freed blocks from it.
-No starvation by traffic shape.
+**Preemption** (preemptive policies, paged only): when the selected
+request cannot get a lane or its blocks, a strictly lower-ranked
+decode-phase lane is evicted and requeued. The victim keeps its
+RequestState (tokens + sampling stream carry over); its full-block
+written prefix — prompt plus generated tokens — is inserted into the
+prefix trie before its block references drop, so the resume admission
+matches those blocks straight back and re-prefills only the tail.
+Output is token-for-token identical to an unpreempted run.
 
-With a :class:`repro.serve.prefixcache.PrefixCache` attached too,
-admission first matches the prompt against the radix trie: matched blocks
-(increfed, read-only) go straight into the head of the request's block
-list, only the remainder is allocated, and ``prefill_done`` starts at the
-matched token count so chunked prefill begins at the first uncached
-token. At eviction the request's full-block prefixes are inserted into
-the trie before its references drop.
+**Deadlines**: ``expire_deadlines(now_s)`` cancels queued requests and
+evicts active lanes whose ``deadline_s`` has passed (reason
+``deadline_missed``); the metrics layer reports the miss rate per
+priority class.
 
-Pure host-side Python (numpy only), trivially unit-testable.
+Pure host-side Python (numpy only), trivially unit-testable: every method
+that reads the clock takes an explicit ``now_s``.
 """
 from __future__ import annotations
-
-import collections
 
 import numpy as np
 
 from repro.serve.blockpool import BlockPool
+from repro.serve.policy import SchedPolicy, get_policy
 from repro.serve.prefixcache import PrefixCache
 from repro.serve.request import Request, RequestState
 
@@ -49,7 +59,8 @@ from repro.serve.request import Request, RequestState
 class SlotScheduler:
     def __init__(self, num_slots: int, *, max_len: int,
                  pool: BlockPool | None = None,
-                 prefix_cache: PrefixCache | None = None):
+                 prefix_cache: PrefixCache | None = None,
+                 policy: str | SchedPolicy | None = None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if prefix_cache is not None and pool is None:
@@ -60,17 +71,23 @@ class SlotScheduler:
         self.max_len = max_len
         self.pool = pool
         self.prefix_cache = prefix_cache
-        self.queue: collections.deque[Request] = collections.deque()
+        self.policy = get_policy(policy)
+        self.queue: list[Request] = []
         self.slots: list[RequestState | None] = [None] * num_slots
         self.tick = 0
         self.finished: list[RequestState] = []
+        self._paused: dict[int, RequestState] = {}  # preempted, by request_id
         self._admissions = 0
         self._deferred = 0
-        self._evictions: dict[str, int] = {}
+        self._evictions: dict[str, int] = {}  # terminal finish reasons
+        self._preemptions = 0
+        self._resumes = 0
+        self._deadline_missed = 0
         self._prefill_order: list[int] = []   # slots mid-chunked-prefill
 
     # ------------------------------------------------------------ queue
-    def submit(self, request: Request) -> Request:
+    def submit(self, request: Request, now_s: float = 0.0) -> Request:
+        request.validate(now_s)
         if request.prompt_len >= self.max_len:
             raise ValueError(
                 f"prompt_len={request.prompt_len} does not fit max_len="
@@ -85,6 +102,7 @@ class SlotScheduler:
                     f"({self.pool.capacity_tokens()} tokens) — the request "
                     f"could never be admitted")
         request.arrival_tick = self.tick
+        request.submitted_s = now_s
         self.queue.append(request)
         return request
 
@@ -113,16 +131,35 @@ class SlotScheduler:
     def idle(self) -> bool:
         return not self.queue and self.occupancy() == 0
 
-    def admit_next(self, now_s: float = 0.0) -> RequestState | None:
-        """Bind the FIFO head to the lowest free slot; None if the queue is
-        empty, every lane is occupied, or (paged) the pool cannot cover the
-        head's prompt + budget right now — the head stays queued (nothing
-        behind it is tried: freed blocks cannot be stolen by later
-        arrivals) and the stall is counted."""
-        free = self.free_slots()
-        if not free or not self.queue:
+    def _pick_victim(self, candidate: Request) -> RequestState | None:
+        """The lane the policy would evict for ``candidate`` — preemptive
+        policies only, paged only (a contiguous resume could exceed the
+        one-shot prefill pad)."""
+        if self.pool is None:
             return None
-        req = self.queue[0]
+        return self.policy.victim(
+            candidate, [s for s in self.slots if s is not None])
+
+    def admit_next(self, now_s: float = 0.0) -> RequestState | None:
+        """Bind the policy's selected request to the lowest free slot;
+        None if the queue is empty or the selection cannot run right now.
+        Only the selected request is ever tried — a deferred selection
+        re-checks on every tick and other queued requests cannot steal
+        freed blocks from it. Preemptive policies may first evict a
+        strictly lower-ranked decode lane to free a lane and/or its
+        blocks; the victim is requeued for a later resume."""
+        if not self.queue:
+            return None
+        idx = self.policy.select(self.queue, now_s=now_s,
+                                 prefix_cache=self.prefix_cache)
+        req = self.queue[idx]
+        if not self.free_slots():
+            victim = self._pick_victim(req)
+            if victim is None:
+                return None
+            self.preempt(victim.slot, now_s)
+        resume = self._paused.get(req.request_id)
+        seq = resume.full_sequence() if resume is not None else req.prompt
         blocks = None
         cached_tokens = 0
         if self.pool is not None:
@@ -130,37 +167,132 @@ class SlotScheduler:
             if self.prefix_cache is not None:
                 # match first: the incref pins the prefix against the
                 # reclaim alloc() may run to satisfy the remainder
-                shared = self.prefix_cache.match(req.prompt, req.cache_salt)
+                shared = self.prefix_cache.match(seq, req.cache_salt)
                 cached_tokens = len(shared) * self.pool.block_size
+            # a resumed sequence is prompt + generated so far, and its
+            # remaining budget is smaller by the same amount — the block
+            # need is prompt + budget either way
             need = self.pool.blocks_for(
                 req.prompt_len + req.budget(self.max_len))
-            fresh = self.pool.alloc(need - len(shared))
-            if fresh is None:
-                if self.prefix_cache is not None:
-                    # undo the match — references AND counters: a deferred
-                    # head re-matches every tick, and only the attempt
-                    # that admits may count toward hit_rate
-                    self.prefix_cache.cancel(req.prompt, shared)
-                self._deferred += 1
-                return None
+            while True:
+                fresh = self.pool.alloc(need - len(shared))
+                if fresh is not None:
+                    break
+                victim = self._pick_victim(req)
+                if victim is None:
+                    if self.prefix_cache is not None:
+                        # undo the match — references AND counters: a
+                        # deferred selection re-matches every tick, and
+                        # only the attempt that admits may count toward
+                        # hit_rate
+                        self.prefix_cache.cancel(seq, shared)
+                    self._deferred += 1
+                    return None
+                self.preempt(victim.slot, now_s)
             blocks = shared + fresh
-        self.queue.popleft()
-        st = RequestState(
-            request=req, slot=free[0], admitted_tick=self.tick,
-            admitted_s=now_s, blocks=blocks,
-            admission_index=self._admissions)
-        self.slots[free[0]] = st
+        self.queue.pop(idx)
+        slot = self.free_slots()[0]
+        if resume is not None:
+            del self._paused[req.request_id]
+            st = resume
+            st.slot = slot
+            st.blocks = blocks
+            self._resumes += 1
+        else:
+            st = RequestState(
+                request=req, slot=slot, admitted_tick=self.tick,
+                admitted_s=now_s, blocks=blocks,
+                admission_index=self._admissions)
+        self.slots[slot] = st
         self._admissions += 1
         if self.pool is not None:
             # cached prefix tokens are already written: chunked prefill
             # starts at the first uncached token (zero prefill if capped
-            # only by the last-token rule)
+            # only by the last-token rule). A resume replays prompt +
+            # generated tokens the same way — the preemption inserted the
+            # written prefix into the trie, so usually only the tail
+            # block re-prefills.
+            st.prefill_tokens = seq
+            st.prefill_target = int(seq.shape[0])
             st.prefill_done = cached_tokens
-            st.cached_tokens = cached_tokens
-            self._prefill_order.append(free[0])
+            if resume is None:
+                st.cached_tokens = cached_tokens
+            self._prefill_order.append(slot)
         else:
             st.prefill_done = req.prompt_len   # one-shot admission prefill
         return st
+
+    # ------------------------------------------------------- preemption
+    def preempt(self, slot: int, now_s: float = 0.0) -> RequestState:
+        """Evict a decode-phase lane and requeue its request for resume.
+        The state object survives — tokens and the sampling stream carry
+        over — and the written full-block prefix (prompt + generated
+        tokens; the last sampled token's KV is not written until it is
+        fed) goes into the prefix trie before the block references drop,
+        so the resume re-prefills only the uncached tail."""
+        st = self.slots[slot]
+        if st is None:
+            raise ValueError(f"preempt of vacant slot {slot}")
+        if st.prefilling or not st.tokens:
+            raise ValueError(
+                f"slot {slot} is mid-prefill — only decode-phase lanes "
+                f"with at least one token can be preempted")
+        self.slots[slot] = None
+        st.preemptions += 1
+        self._preemptions += 1
+        if self.pool is not None and st.blocks:
+            if self.prefix_cache is not None:
+                written = st.full_sequence()[:-1]
+                self.prefix_cache.insert(written, st.blocks,
+                                         st.request.cache_salt)
+            self.pool.decref(st.blocks)
+        st.blocks = None
+        st.slot = -1
+        self._paused[st.request.request_id] = st
+        self.queue.append(st.request)
+        return st
+
+    # -------------------------------------------------------- deadlines
+    def drop_expired(self, request: Request, now_s: float) -> RequestState:
+        """Terminal-miss a request whose deadline passed before it ever
+        reached the queue (the engine holds trace arrivals back; a
+        saturated run can sail past a tight deadline before submit)."""
+        st = RequestState(request=request, slot=-1, admitted_tick=-1,
+                          admitted_s=now_s)
+        st.finish_reason = "deadline_missed"
+        st.finished_tick = self.tick
+        st.finished_s = now_s
+        self.finished.append(st)
+        self._deadline_missed += 1
+        return st
+
+    def expire_deadlines(self, now_s: float) -> list[RequestState]:
+        """Cancel every request whose ``deadline_s`` has passed: queued
+        requests (including preempted ones awaiting resume) are dropped,
+        active lanes are evicted — all with reason ``deadline_missed``.
+        Returns the newly finished states so the engine can record them."""
+        out: list[RequestState] = []
+        keep: list[Request] = []
+        for r in self.queue:
+            if r.deadline_s is not None and now_s > r.deadline_s:
+                st = self._paused.pop(r.request_id, None)
+                if st is None:
+                    st = RequestState(request=r, slot=-1, admitted_tick=-1,
+                                      admitted_s=now_s)
+                st.finish_reason = "deadline_missed"
+                st.finished_tick = self.tick
+                st.finished_s = now_s
+                self.finished.append(st)
+                self._deadline_missed += 1
+                out.append(st)
+            else:
+                keep.append(r)
+        self.queue = keep
+        for slot, st in enumerate(self.slots):
+            if (st is not None and st.request.deadline_s is not None
+                    and now_s > st.request.deadline_s):
+                out.append(self.evict(slot, "deadline_missed", now_s))
+        return out
 
     # ---------------------------------------------------- chunked prefill
     def prefill_head(self) -> RequestState | None:
@@ -191,13 +323,24 @@ class SlotScheduler:
         st.finished_s = now_s
         self.slots[slot] = None
         self.finished.append(st)
-        self._evictions[reason] = self._evictions.get(reason, 0) + 1
+        if reason == "deadline_missed":
+            self._deadline_missed += 1
+        else:
+            self._evictions[reason] = self._evictions.get(reason, 0) + 1
         if self.pool is not None and st.blocks:
             if self.prefix_cache is not None:
                 # adopt the full-block prefixes before dropping references
                 # (mark_cached needs them live); shared leading blocks are
-                # already nodes and insert nothing
-                self.prefix_cache.insert(st.request.prompt, st.blocks,
+                # already nodes and insert nothing. A deadline kill can
+                # land mid-prefill — only the written prefix may be
+                # indexed (unwritten blocks would serve garbage KV)
+                if st.prefill_done < st._target:
+                    seq = (st.prefill_tokens if st.prefill_tokens is not None
+                           else st.request.prompt)
+                    insertable = np.asarray(seq)[: st.prefill_done]
+                else:
+                    insertable = st.request.prompt
+                self.prefix_cache.insert(insertable, st.blocks,
                                          st.request.cache_salt)
             self.pool.decref(st.blocks)
         if slot in self._prefill_order:
@@ -208,14 +351,24 @@ class SlotScheduler:
     def live_tokens(self) -> int:
         """Tokens currently written into occupied lanes' caches."""
         return sum(
-            s.prefill_done + len(s.tokens)
-            for s in self.slots if s is not None)
+            s.live_kv_tokens for s in self.slots if s is not None)
 
     def counters(self) -> dict:
         out = {
             "admissions": self._admissions,
             "deferred_admissions": self._deferred,
-            "evictions": dict(self._evictions),
+            # evictions by cause, not one aggregate: normal completion
+            # (by finish reason), SLO preemption (requeued, will resume)
+            # and deadline expiry (terminal) are different signals
+            "evictions": {
+                "finished": dict(self._evictions),
+                "preempted": self._preemptions,
+                "deadline_missed": self._deadline_missed,
+            },
+            "preemptions": self._preemptions,
+            "resumes": self._resumes,
+            "deadline_missed": self._deadline_missed,
+            "policy": self.policy.name,
             "pending": self.pending,
             "occupied": self.occupancy(),
             "ticks": self.tick,

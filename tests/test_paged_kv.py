@@ -79,6 +79,103 @@ def test_blockpool_rejects_bad_configs_and_double_free():
 
 
 # ------------------------------------------------- pool-aware scheduling
+def test_blockpool_refcount_invariants_under_fuzz():
+    """Property test: a seeded randomized trace of alloc / incref /
+    decref / mark_cached / reclaim preserves the pool's conservation
+    laws at every step — no block is ever lost, double-freed, or in two
+    states at once.
+
+    Invariants checked after every operation:
+    * conservation: free + cached_idle + in_use == usable_blocks;
+    * a live block id appears in exactly one owner list, and never in
+      the free or cached-idle sets;
+    * refcounts are >= 1 for owned blocks; decref of the last reference
+      frees (or parks cached-idle) and a further decref raises;
+    * fragmentation_tokens is always >= 0.
+    """
+    rng = np.random.default_rng(1234)
+    pool = BlockPool(num_blocks=33, block_size=4)
+    owned: list[list[int]] = []        # one entry per live "request"
+    cached: set[int] = set()           # blocks we handed to mark_cached
+
+    def reclaimer(need: int) -> int:
+        # stand-in for the prefix cache's pressure valve: surrender
+        # cached-idle blocks on demand (production always wires one)
+        freed = 0
+        for b in sorted(cached):
+            if freed >= need:
+                break
+            if pool.refcount(b) == 0:
+                pool.release_cached(b)
+                cached.discard(b)
+                freed += 1
+        return freed
+
+    pool.set_reclaimer(reclaimer)
+
+    def check():
+        in_use = {b for blks in owned for b in blks}
+        assert pool.blocks_in_use == len(in_use)
+        assert (pool.free_blocks + pool.cached_idle_blocks
+                + pool.blocks_in_use) == pool.usable_blocks
+        for b in in_use:
+            assert pool.refcount(b) >= 1
+        # logical tokens can't exceed physical capacity here (no prefix
+        # sharing in this trace), so frag is physical slack and >= 0
+        live = sum(len(blks) for blks in owned) * pool.block_size
+        assert pool.fragmentation_tokens(live) >= 0
+        assert pool.fragmentation_tokens(0) >= 0
+
+    for step in range(600):
+        op = rng.integers(5)
+        if op == 0:                                    # alloc
+            n = int(rng.integers(1, 5))
+            got = pool.alloc(n)
+            if got is not None:
+                assert len(got) == len(set(got)) == n
+                assert 0 not in got                    # null block reserved
+                owned.append(got)
+            else:
+                assert not pool.can_alloc(n)
+        elif op == 1 and owned:                        # incref (sharing)
+            blks = owned[int(rng.integers(len(owned)))]
+            pool.incref(blks)
+            owned.append(list(blks))
+        elif op == 2 and owned:                        # decref one owner
+            blks = owned.pop(int(rng.integers(len(owned))))
+            before = {b: pool.refcount(b) for b in set(blks)}
+            pool.decref(blks)
+            for b in set(blks):
+                assert pool.refcount(b) == before[b] - blks.count(b)
+        elif op == 3 and owned:                        # cache a block
+            blks = owned[int(rng.integers(len(owned)))]
+            b = blks[int(rng.integers(len(blks)))]
+            if b not in cached:
+                pool.mark_cached(b)
+                cached.add(b)
+        elif op == 4 and cached:                       # un-cache an idle one
+            idle = [b for b in cached if pool.refcount(b) == 0]
+            if idle:
+                b = idle[int(rng.integers(len(idle)))]
+                pool.release_cached(b)
+                cached.discard(b)
+        check()
+
+    # drain: every owner releases; nothing leaks
+    for blks in owned:
+        pool.decref(blks)
+    owned.clear()
+    check()
+    assert pool.blocks_in_use == 0
+    assert pool.free_blocks + pool.cached_idle_blocks == pool.usable_blocks
+    # double-free of a fully released list must raise, not corrupt
+    fresh = pool.alloc(2)
+    pool.decref(fresh)
+    with pytest.raises(ValueError, match="double free"):
+        pool.decref(fresh)
+    check()
+
+
 def test_scheduler_defers_admission_until_blocks_free():
     pool = BlockPool(num_blocks=5, block_size=4)    # 16 usable tokens
     s = SlotScheduler(2, max_len=16, pool=pool)

@@ -53,7 +53,8 @@ def test_scheduler_reuses_evicted_slots():
     again = s.admit_next()
     assert again.slot == first.slot          # lowest freed lane is reused
     assert s.occupancy() == 2 and s.pending == 2
-    assert s.counters()["evictions"] == {"stop": 1}
+    assert s.counters()["evictions"] == {
+        "finished": {"stop": 1}, "preempted": 0, "deadline_missed": 0}
 
 
 def test_scheduler_rejects_oversized_prompt():
@@ -138,14 +139,26 @@ def test_engine_metrics_export(dense_setup, tmp_path):
     agg = d["aggregate"]
     assert agg["generated_tokens"] == sum(len(s.tokens)
                                           for s in engine.finished)
-    assert agg["admissions"] == 3 and sum(agg["evictions"].values()) == 3
+    assert agg["admissions"] == 3
+    assert sum(agg["evictions"]["finished"].values()) == 3
+    assert agg["evictions"]["preempted"] == 0
+    assert agg["evictions"]["deadline_missed"] == 0
+    assert agg["preemptions"] == 0 and agg["resumes"] == 0
+    assert agg["policy"] == "fifo"
     assert 0 < agg["mean_occupancy"] <= 2
     assert agg["tokens_per_sec"] > 0
     for r in d["requests"]:
         assert r["ttft_s"] is not None and r["ttft_s"] >= 0
+        assert r["queue_s"] is not None and r["queue_s"] >= 0
+        assert r["ttft_ticks"] is not None and r["ttft_ticks"] >= 0
         assert r["per_token_s"] > 0
+        assert r["preemptions"] == 0
         assert r["finish_reason"] in ("stop", "length")
         assert r["cached_tokens"] == 0       # no prefix cache on this engine
+    assert set(d["slo"]) == {"0"}            # one priority class (default)
+    assert d["slo"]["0"]["n"] == 3 and d["slo"]["0"]["miss_rate"] == 0.0
+    assert d["budget"]["target_ttft_s"] is None
+    assert d["budget"]["final_chunks"] == 1  # no target: pinned at min
     assert d["prefix_cache"] == {}           # section always exported
     assert d["plan_cache"]["steady_state"] is True
 
@@ -239,6 +252,100 @@ def test_engine_on_prequantized_moe():
         m = engine.run(_requests([(6, 4), (3, 2), (5, 3)], stop=()))
         assert m.plan_cache["steady_state"] is True
         assert sorted(len(s.tokens) for s in engine.finished) == [2, 3, 4]
+
+
+# -------------------------------------------------- slo: preempt/resume
+def test_engine_preempt_resume_token_parity(dense_setup):
+    """The tentpole regression: a decode preempted by a higher-priority
+    arrival, requeued, and resumed produces *exactly* the tokens of an
+    unpreempted run — the KV it re-prefills (trie prefix + tail replay)
+    is bit-equivalent to the KV it lost."""
+    from repro.serve import SimClock
+
+    cfg, mesh, params = dense_setup
+    rng = np.random.default_rng(11)
+    lo_prompt = rng.integers(0, 503, size=6, dtype=np.int32)
+    hi_prompt = rng.integers(0, 503, size=6, dtype=np.int32)
+    common = dict(num_slots=1, max_len=24, prompt_pad=8, kv_block_size=4,
+                  num_kv_blocks=13)
+
+    engine = ServeEngine(cfg, mesh, params, sched_policy="priority",
+                         clock=SimClock(1e-4), **common)
+    engine.plan_warmup()
+    lo = Request(prompt=lo_prompt, max_new_tokens=10, priority=0)
+    hi = Request(prompt=hi_prompt, max_new_tokens=3, priority=5,
+                 arrival_s=0.002)
+    m = engine.run([lo, hi])
+    assert m.preemptions >= 1 and m.resumes == m.preemptions
+    assert m.plan_cache["steady_state"] is True
+    by_id = {st.request.request_id: st for st in engine.finished}
+    assert by_id[lo.request_id].preemptions >= 1
+    assert by_id[hi.request_id].preemptions == 0
+    preempted_tokens = by_id[lo.request_id].tokens
+
+    engine.reset()          # fresh pool/trie/scheduler, same compiled fns
+    alone = Request(prompt=lo_prompt, max_new_tokens=10, priority=0)
+    engine.run([alone])
+    assert engine.finished[0].tokens == preempted_tokens
+
+
+def test_engine_preemptive_policy_requires_paged():
+    cfg = C.smoke(C.get_config("qwen1.5-4b"))
+    mesh = make_local_mesh()
+    params = models.init(jax.random.PRNGKey(3), cfg)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, mesh, params, num_slots=2, max_len=16,
+                    prompt_pad=8, sched_policy="edf")
+
+
+def test_engine_deadline_miss_and_arrivals(dense_setup):
+    """Arrival-aware run(): a request is held until its arrival_s; an
+    unmeetable deadline is cancelled (queued or mid-decode) and lands in
+    the metrics as a per-class deadline miss, not an exception."""
+    from repro.serve import SimClock
+
+    cfg, mesh, params = dense_setup
+    engine = ServeEngine(cfg, mesh, params, num_slots=1, max_len=24,
+                         prompt_pad=8, kv_block_size=4, num_kv_blocks=13,
+                         sched_policy="edf", clock=SimClock(1e-3))
+    engine.plan_warmup()
+    rng = np.random.default_rng(5)
+    mk = lambda g, **kw: Request(
+        prompt=rng.integers(0, 503, size=6, dtype=np.int32),
+        max_new_tokens=g, **kw)
+    long = mk(12, priority=0)                       # hogs the single lane
+    doomed = mk(4, priority=2, deadline_s=0.004, arrival_s=0.002)
+    m = engine.run([long, doomed])
+    assert m.deadline_missed == 1
+    assert m.plan_cache["steady_state"] is True
+    d = m.to_dict()
+    missed = [r for r in d["requests"]
+              if r["finish_reason"] == "deadline_missed"]
+    assert len(missed) == 1 and missed[0]["priority"] == 2
+    assert d["slo"]["2"]["miss_rate"] == 1.0
+    assert d["slo"]["0"]["miss_rate"] == 0.0
+    by_id = {st.request.request_id: st for st in engine.finished}
+    assert len(by_id[long.request_id].tokens) == 12  # untouched by the miss
+
+
+def test_engine_budget_controller_reacts(dense_setup):
+    """--ttft-target-ms feedback: an unmeetably tight target drives the
+    prefill budget to its ceiling; chunk accounting stays plan-warm."""
+    from repro.serve import SimClock, synthetic_trace
+
+    cfg, mesh, params = dense_setup
+    engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=24,
+                         prompt_pad=8, kv_block_size=4, num_kv_blocks=25,
+                         prefill_chunk=4, ttft_target_ms=1e-3,
+                         max_prefill_chunks=3, clock=SimClock(1e-3))
+    engine.plan_warmup()
+    m = engine.run(synthetic_trace(6, vocab_size=503, prompt_lens=[8, 6],
+                                   max_new_tokens=[4, 3], seed=2))
+    assert m.plan_cache["steady_state"] is True
+    assert m.budget["observations"] == 6
+    assert m.budget["raises"] >= 1
+    assert m.budget["final_chunks"] == 3
+    assert len(engine.finished) == 6
 
 
 def test_synthetic_trace_shapes():

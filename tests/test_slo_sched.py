@@ -1,0 +1,384 @@
+"""SLO-aware scheduling under the deterministic harness: policy ordering,
+preemption/resume at the scheduler level, deadline expiry, submit-time
+validation, the budget controller's feedback loop, the bursty trace
+generator and the per-class SLO metrics rollup.
+
+Everything here is host-side and device-free (no model, no jax compile):
+the scheduler's clock inputs are explicit ``now_s`` arguments and the
+only randomness is seeded — each test is an exact replay.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve import (BlockPool, BudgetController, EdfPolicy, FifoPolicy,
+                        PrefixAffinityPolicy, PrefixCache, PriorityPolicy,
+                        Request, RequestState, SimClock, SlotScheduler,
+                        bursty_trace, get_policy)
+from repro.serve.metrics import EngineMetrics
+
+
+def _req(plen=4, gen=4, *, prio=0, deadline=None, arrival=0.0, base=0,
+         seed=0):
+    rng = np.random.default_rng(seed + base)
+    return Request(prompt=rng.integers(0, 97, size=plen, dtype=np.int32),
+                   max_new_tokens=gen, priority=prio, deadline_s=deadline,
+                   arrival_s=arrival)
+
+
+def _finish_prefill(s, st):
+    s.prefill_advance(st.slot, st._target - st.prefill_done)
+
+
+# ------------------------------------------------------------- policies
+def test_get_policy_resolution():
+    assert isinstance(get_policy(None), FifoPolicy)
+    assert isinstance(get_policy("edf"), EdfPolicy)
+    p = PriorityPolicy()
+    assert get_policy(p) is p
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        get_policy("sjf")
+
+
+def test_priority_policy_selects_highest_then_fifo():
+    pol = PriorityPolicy()
+    q = [_req(prio=0, base=i) for i in range(2)] + [_req(prio=3, base=9)]
+    for i, r in enumerate(q):
+        r.arrival_tick = i
+    assert pol.select(q) == 2                 # the priority-3 request
+    q.pop(2)
+    assert pol.select(q) == 0                 # equal priority: arrival order
+
+
+def test_edf_policy_orders_by_deadline_none_last():
+    pol = EdfPolicy()
+    q = [_req(deadline=None, base=0), _req(deadline=0.2, base=1),
+         _req(deadline=0.9, base=2)]
+    for i, r in enumerate(q):
+        r.arrival_tick = i
+    assert pol.select(q) == 1
+    assert pol.rank(q[0])[0] == math.inf
+
+
+def test_victim_requires_strictly_lower_rank_and_decode_phase():
+    pol = PriorityPolicy()
+    cand = _req(prio=2, base=0)
+    lo = RequestState(request=_req(prio=0, base=1), slot=0,
+                      admitted_tick=0, admitted_s=0.0, admission_index=0)
+    lo.prefill_done = lo.request.prompt_len
+    lo.tokens = [5]
+    # same-rank lane is never a victim (no admit->preempt cycles)
+    same = RequestState(request=_req(prio=2, base=2), slot=1,
+                        admitted_tick=0, admitted_s=0.0, admission_index=1)
+    same.prefill_done = same.request.prompt_len
+    same.tokens = [5]
+    assert pol.victim(cand, [same]) is None
+    assert pol.victim(cand, [same, lo]) is lo
+    # mid-prefill / token-less lanes are never victims
+    lo.tokens = []
+    assert pol.victim(cand, [lo]) is None
+    lo.tokens = [5]
+    lo.prefill_done = 0
+    assert pol.victim(cand, [lo]) is None
+    # non-preemptive policies never name a victim
+    fresh = RequestState(request=_req(prio=0, base=3), slot=0,
+                         admitted_tick=0, admitted_s=0.0)
+    fresh.prefill_done = fresh.request.prompt_len
+    fresh.tokens = [5]
+    assert FifoPolicy().victim(cand, [fresh]) is None
+
+
+def test_victim_tie_break_is_lifo():
+    pol = PriorityPolicy()
+    cand = _req(prio=2, base=0)
+    lanes = []
+    for i in range(2):
+        st = RequestState(request=_req(prio=0, base=1 + i), slot=i,
+                          admitted_tick=i, admitted_s=0.0, admission_index=i)
+        st.request.arrival_tick = 0
+        st.prefill_done = st.request.prompt_len
+        st.tokens = [5]
+        lanes.append(st)
+    # equal victim rank: the most recent admission (least sunk work) goes
+    assert pol.victim(cand, lanes) is lanes[1]
+
+
+def test_prefix_affinity_prefers_longest_cached_prefix():
+    pool = BlockPool(12, 4)
+    cache = PrefixCache(pool)
+    header = np.arange(8, dtype=np.int32)
+    blocks = pool.alloc(2)
+    cache.insert(header, blocks)
+    pool.decref(blocks)                       # cached-idle, matchable
+    pol = PrefixAffinityPolicy()
+    miss = Request(prompt=np.arange(100, 109, dtype=np.int32),
+                   max_new_tokens=2)
+    hit = Request(prompt=np.concatenate([header, header[:1] + 50]).astype(
+        np.int32), max_new_tokens=2)
+    q = [miss, hit]
+    for i, r in enumerate(q):
+        r.arrival_tick = i
+    assert pol.select(q, prefix_cache=cache) == 1
+    assert pol.select(q, prefix_cache=None) == 0   # falls back to FIFO
+    # the probe left no fingerprints (side-effect-free peek)
+    assert cache.lookups == 0 and cache.hits == 0
+    assert all(pool.refcount(b) == 0 for b in blocks)
+
+
+# ----------------------------------------------- preemption at the core
+def _paged_sched(policy="priority", num_slots=1, num_blocks=13,
+                 block_size=4, max_len=24, with_cache=True):
+    pool = BlockPool(num_blocks, block_size)
+    cache = PrefixCache(pool) if with_cache else None
+    return SlotScheduler(num_slots, max_len=max_len, pool=pool,
+                         prefix_cache=cache, policy=policy)
+
+
+def test_preempt_requeues_and_resume_reprefills_only_tail():
+    s = _paged_sched()
+    lo = _req(plen=6, gen=10, prio=0, base=0)
+    s.submit(lo, 0.0)
+    st = s.admit_next(0.0)
+    _finish_prefill(s, st)
+    for i, t in enumerate((7, 8, 9)):
+        st.append(t, 0.1 * (i + 1), tick=i + 1)
+    hi = _req(plen=6, gen=2, prio=5, base=1)
+    s.submit(hi, 0.5)
+    st_hi = s.admit_next(0.5)
+    assert st_hi.request is hi                # the lane was taken
+    assert s.counters()["preemptions"] == 1
+    assert lo.request_id in s._paused and s.pending == 1
+    # finish hi, then the victim resumes: same state object, tokens and
+    # prefill target = prompt + generated-so-far
+    _finish_prefill(s, st_hi)
+    st_hi.append(3, 0.6, tick=4)
+    st_hi.append(4, 0.7, tick=5)
+    s.evict(st_hi.slot, "length", 0.8)
+    st_r = s.admit_next(0.9)
+    assert st_r is st
+    assert st_r.preemptions == 1 and s.counters()["resumes"] == 1
+    assert st_r.prefill_target == lo.prompt_len + 3
+    assert st_r.tokens == [7, 8, 9]
+    # the written prefix (prompt + 3 tokens - the unwritten last) spans
+    # two full 4-token blocks; both came back from the trie
+    assert st_r.prefill_done == 8
+    assert st_r.resumed_tokens == 3
+    # block need is identical to a fresh admission (seq grew, budget
+    # shrank by the same amount)
+    assert len(st_r.blocks) == s.pool.blocks_for(
+        lo.prompt_len + lo.budget(s.max_len))
+
+
+def test_preempt_rejects_vacant_and_midprefill_lanes():
+    s = _paged_sched()
+    with pytest.raises(ValueError, match="vacant"):
+        s.preempt(0)
+    r = _req(plen=6, gen=4)
+    s.submit(r, 0.0)
+    st = s.admit_next(0.0)
+    with pytest.raises(ValueError, match="mid-prefill"):
+        s.preempt(st.slot)
+    _finish_prefill(s, st)
+    with pytest.raises(ValueError, match="mid-prefill"):
+        s.preempt(st.slot)                    # no generated token yet
+
+
+def test_preemption_frees_blocks_for_the_winner():
+    # pool sized so both requests can't hold blocks at once: admission of
+    # the high-priority request must preempt to *allocate*, not for a lane
+    s = _paged_sched(num_slots=2, num_blocks=7, max_len=24)
+    lo = _req(plen=6, gen=10, prio=0, base=0)   # needs 4 blocks
+    s.submit(lo, 0.0)
+    st = s.admit_next(0.0)
+    _finish_prefill(s, st)
+    st.append(7, 0.1, tick=1)
+    hi = _req(plen=6, gen=10, prio=5, base=1)   # needs 4; only 2 free
+    s.submit(hi, 0.2)
+    st_hi = s.admit_next(0.2)
+    assert st_hi is not None and st_hi.request is hi
+    assert s.counters()["preemptions"] == 1
+
+
+def test_fifo_never_preempts():
+    s = _paged_sched(policy="fifo")
+    r0 = _req(plen=6, gen=10, base=0)
+    s.submit(r0, 0.0)
+    st = s.admit_next(0.0)
+    _finish_prefill(s, st)
+    st.append(7, 0.1, tick=1)
+    s.submit(_req(plen=6, gen=2, prio=9, base=1), 0.2)
+    assert s.admit_next(0.2) is None          # defers, lane stays
+    assert s.counters()["preemptions"] == 0
+
+
+# -------------------------------------------------------------- deadlines
+def test_expire_deadlines_drops_queue_and_evicts_lanes():
+    s = _paged_sched(policy="edf", num_slots=1)
+    active = _req(plen=6, gen=10, deadline=1.0, base=0)
+    queued = _req(plen=6, gen=4, deadline=0.5, base=1)
+    safe = _req(plen=6, gen=4, deadline=99.0, base=2)
+    s.submit(active, 0.0)
+    st = s.admit_next(0.0)
+    _finish_prefill(s, st)
+    st.append(7, 0.1, tick=1)
+    s.submit(queued, 0.2)
+    s.submit(safe, 0.2)
+    out = s.expire_deadlines(0.9)             # only `queued` is past due
+    assert [o.request.request_id for o in out] == [queued.request_id]
+    assert out[0].finish_reason == "deadline_missed"
+    assert out[0].admitted_tick == -1         # never held a lane
+    out = s.expire_deadlines(1.1)             # now the active lane too
+    assert [o.request.request_id for o in out] == [active.request_id]
+    assert s.slots[0] is None
+    c = s.counters()
+    assert c["deadline_missed"] == 2
+    assert c["evictions"]["deadline_missed"] == 2
+    assert c["evictions"]["finished"] == {}
+    assert s.pending == 1                     # `safe` still queued
+
+
+def test_expired_paused_request_is_cancelled_not_resumed():
+    s = _paged_sched(policy="priority")
+    lo = _req(plen=6, gen=10, prio=0, deadline=2.0, base=0)
+    s.submit(lo, 0.0)
+    st = s.admit_next(0.0)
+    _finish_prefill(s, st)
+    st.append(7, 0.1, tick=1)
+    s.submit(_req(plen=6, gen=8, prio=5, base=1), 0.2)
+    s.admit_next(0.2)                         # preempts lo
+    assert lo.request_id in s._paused
+    out = s.expire_deadlines(3.0)
+    assert [o.request.request_id for o in out] == [lo.request_id]
+    assert out[0] is st                       # the paused state, finished
+    assert out[0].tokens == [7] and not s._paused
+
+
+def test_drop_expired_records_terminal_miss():
+    s = SlotScheduler(1, max_len=16)
+    r = _req(deadline=0.1)
+    st = s.drop_expired(r, 5.0)
+    assert st.finish_reason == "deadline_missed" and st.admitted_tick == -1
+    assert s.counters()["deadline_missed"] == 1
+    assert s.finished == [st]
+
+
+# ------------------------------------------------------------- validation
+def test_submit_validates_request_fields():
+    s = SlotScheduler(1, max_len=32)
+    bad = _req()
+    bad.max_new_tokens = 0
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        s.submit(bad, 0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        s.submit(_req().__class__(prompt=np.arange(4, dtype=np.int32),
+                                  max_new_tokens=2, top_p=0.0), 0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        s.submit(Request(prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=2, top_p=1.5), 0.0)
+    with pytest.raises(ValueError, match="temperature"):
+        s.submit(Request(prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=2, temperature=-0.5), 0.0)
+    with pytest.raises(ValueError, match="deadline"):
+        s.submit(Request(prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=2, deadline_s=1.0), now_s=2.0)
+    # a valid request sails through and gets stamped
+    ok = Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=2,
+                 top_p=1.0, deadline_s=3.0)
+    s.submit(ok, now_s=2.0)
+    assert ok.submitted_s == 2.0
+
+
+# ----------------------------------------------------- budget controller
+def test_budget_controller_feedback_loop():
+    b = BudgetController(0.010, min_chunks=1, max_chunks=3)
+    assert b.chunks_per_tick() == 1
+    b.observe_ttft(0.050)                     # way over target: raise
+    assert b.chunks_per_tick() == 2
+    b.observe_ttft(0.050)
+    assert b.chunks_per_tick() == 3
+    b.observe_ttft(0.050)                     # pinned at the ceiling
+    assert b.chunks_per_tick() == 3 and b.raises == 2
+    for _ in range(12):                       # EWMA needs a few beats
+        b.observe_ttft(0.0001)
+    assert b.chunks_per_tick() == 1 and b.drops == 2
+    st = b.stats()
+    assert st["observations"] == 15 and st["final_chunks"] == 1
+
+
+def test_budget_controller_none_target_is_pinned():
+    b = BudgetController(None, min_chunks=1, max_chunks=4)
+    for _ in range(5):
+        b.observe_ttft(9.9)
+    assert b.chunks_per_tick() == 1 and b.raises == 0
+    assert b.stats()["ema_ttft_s"] == pytest.approx(9.9)
+
+
+def test_budget_controller_rejects_bad_config():
+    with pytest.raises(ValueError):
+        BudgetController(0.01, min_chunks=0)
+    with pytest.raises(ValueError):
+        BudgetController(0.01, min_chunks=3, max_chunks=2)
+    with pytest.raises(ValueError):
+        BudgetController(-1.0)
+
+
+def test_sim_clock_is_deterministic():
+    a, b = SimClock(0.5), SimClock(0.5)
+    assert [a() for _ in range(3)] == [b() for _ in range(3)] == [
+        0.5, 1.0, 1.5]
+    with pytest.raises(ValueError):
+        SimClock(0.0)
+
+
+# ----------------------------------------------------------- bursty trace
+def test_bursty_trace_is_seeded_and_bursty():
+    tr1 = bursty_trace(16, vocab_size=97, burst_size=4, burst_gap_s=0.25,
+                       seed=3)
+    tr2 = bursty_trace(16, vocab_size=97, burst_size=4, burst_gap_s=0.25,
+                       seed=3)
+    assert all(np.array_equal(a.prompt, b.prompt)
+               and a.priority == b.priority and a.deadline_s == b.deadline_s
+               for a, b in zip(tr1, tr2))
+    arrivals = [r.arrival_s for r in tr1]
+    assert arrivals == sorted(arrivals)
+    assert set(arrivals) == {0.0, 0.25, 0.5, 0.75}
+    assert sum(1 for a in arrivals if a == 0.0) == 4
+    prios = {r.priority for r in tr1}
+    assert prios == {0, 2}                    # both default classes drawn
+    for r in tr1:
+        if r.priority == 2:
+            assert r.deadline_s == pytest.approx(r.arrival_s + 0.5)
+        else:
+            assert r.deadline_s is None
+
+
+def test_bursty_trace_shared_header():
+    tr = bursty_trace(8, vocab_size=97, header_len=6, seed=0)
+    head = tr[0].prompt[:6]
+    assert all(np.array_equal(r.prompt[:6], head) for r in tr)
+
+
+# ------------------------------------------------------------ metrics slo
+def test_slo_summary_per_class_percentiles_and_miss_rate():
+    m = EngineMetrics()
+    mk = lambda prio, ttft_ticks, reason, preempts=0: {
+        "priority": prio, "queue_s": 0.0, "ttft_s": ttft_ticks * 1e-3,
+        "ttft_ticks": ttft_ticks, "finish_reason": reason,
+        "preemptions": preempts}
+    m.requests = [
+        mk(2, 1, "stop"), mk(2, 3, "length"),
+        {"priority": 2, "queue_s": None, "ttft_s": None, "ttft_ticks": None,
+         "finish_reason": "deadline_missed", "preemptions": 0},
+        mk(0, 40, "length", preempts=2),
+    ]
+    slo = m.slo_summary()
+    assert set(slo) == {"0", "2"}
+    hi = slo["2"]
+    assert hi["n"] == 3 and hi["finished"] == 2
+    assert hi["deadline_missed"] == 1
+    assert hi["miss_rate"] == pytest.approx(1 / 3)
+    assert hi["p50_ttft_ticks"] == pytest.approx(2.0)
+    lo = slo["0"]
+    assert lo["preemptions"] == 2 and lo["miss_rate"] == 0.0
+    assert lo["p99_ttft_ticks"] == pytest.approx(40.0)
