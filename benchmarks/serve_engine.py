@@ -28,6 +28,15 @@ token-for-token identical output while skipping >= 50% of all prefill
 tokens (the header's blocks are matched out of the trie instead of
 re-prefilled), staying plan-warm throughout.
 
+A final pair serves a decode-heavy trace through the paged engine with
+**speculative decoding** off and on: an int8 draft (the target's layer-0
+submodel, prequantized) proposes SPEC_K tokens per lane, the target
+verifies every lane in one batched (slots, K+1) pass. The spec run must
+match the baseline token-for-token (committed tokens are the target's
+own greedy argmax), clear >= 1.5x aggregate tokens/sec and stay
+plan-warm — the draft's admit/propose signatures and the verify
+signature are all in the warm-up set.
+
   PYTHONPATH=src python benchmarks/serve_engine.py --json BENCH_serve.json
 """
 from __future__ import annotations
@@ -44,6 +53,7 @@ from repro import configs as C
 from repro import models
 from repro.core.context import use_context
 from repro.launch.mesh import make_local_mesh
+from repro.quant import prequant
 from repro.serve import (ServeEngine, SimClock, bursty_trace,
                          shared_prefix_trace, synthetic_trace)
 from repro.train.servestep import make_serve_step
@@ -100,6 +110,31 @@ SLO_PROMPT_PAD = 32
 SLO_MAX_LEN = 32 + 32 + 1
 SLO_KV_BLOCKS = 21
 SLO_CHUNK = 16
+# spec pair: the target is a deeper model whose upper layers' residual
+# contributions (attn.wo / mlp.w_out) are zeroed, so its logits equal the
+# 1-layer slice's — the int8 draft (layer 0 + shared embed/final_norm/
+# unembed, prequantized) proposes with near-perfect agreement and the
+# measured speedup isolates the speculation machinery: k draft steps +
+# one (slots, k+1) verify pass replace ~k+1 full-depth (slots, 1) decode
+# ticks. The shape is chosen where decode is weight-traffic-bound
+# (d=512), so the batched verify streams each layer's weights once for
+# k+1 positions instead of once per token — measured verify/decode cost
+# ratio ~1.6 at 7x the positions — and the 1-layer draft's step is ~1/8
+# of a target tick. Decode-heavy budgets so speculation (a decode
+# optimization) is what the wall clock sees.
+SPEC_LAYERS = 12
+SPEC_D_MODEL = 512
+SPEC_D_FF = 2048
+SPEC_VOCAB = 2003
+SPEC_HEADS = (8, 4, 64)      # n_heads, n_kv_heads, head_dim
+SPEC_K = 6
+SPEC_N = 8
+SPEC_MAX_NEW = (64, 56, 60, 52)
+SPEC_MAX_LEN = PROMPT_PAD + max(SPEC_MAX_NEW) + 1
+# whole-prompt chunks: speculation retires lanes ~5x faster than plain
+# decode, so admission latency is occupancy it can't hide — one-tick
+# prefill keeps both engines' lanes full (identical setting both sides)
+SPEC_CHUNK = 16
 
 
 def bench_config():
@@ -240,6 +275,81 @@ def run_prefix_pair(cfg, mesh, params) -> dict:
     }
 
 
+def _spec_trace(cfg):
+    return synthetic_trace(
+        SPEC_N, vocab_size=cfg.vocab_size, prompt_lens=PROMPT_LENS,
+        max_new_tokens=SPEC_MAX_NEW, seed=0)
+
+
+def _spec_models():
+    """Target + aligned int8 draft for the speculation pair.
+
+    The target is SPEC_LAYERS deep, but layers >= 1 have their residual
+    write-backs (attn.wo, mlp.w_out; no output biases in this config)
+    zeroed, so every layer past the first is an exact identity on the
+    stream and the target's logits are the layer-0 submodel's. The draft
+    *is* that submodel — layer 0 sliced out of the stacked tree, sharing
+    embed/final_norm/unembed — prequantized to int8. Acceptance is then
+    bounded only by int8 error and batched-verify numerics, while the
+    target still pays full depth per verified position: the honest cost
+    ratio speculation exploits."""
+    heads, kv_heads, head_dim = SPEC_HEADS
+    tcfg = dataclasses.replace(
+        bench_config(), n_layers=SPEC_LAYERS, d_model=SPEC_D_MODEL,
+        d_ff=SPEC_D_FF, vocab_size=SPEC_VOCAB, n_heads=heads,
+        n_kv_heads=kv_heads, head_dim=head_dim,
+        name=bench_config().name + "-spec")
+    tparams = models.init(jax.random.PRNGKey(0), tcfg)
+    lay = tparams["layers"]
+    lay = {**lay,
+           "attn": lay["attn"]._replace(wo=lay["attn"].wo.at[1:].set(0.0)),
+           "mlp": lay["mlp"]._replace(
+               w_out=lay["mlp"].w_out.at[1:].set(0.0))}
+    tparams["layers"] = lay
+    dcfg = dataclasses.replace(tcfg, n_layers=1, name=tcfg.name + "-draft")
+    dparams = {k: v for k, v in tparams.items() if k != "layers"}
+    dparams["layers"] = jax.tree.map(lambda a: a[:1], lay)
+    dparams = prequant.quantize_params(dparams)
+    daxes = prequant.quantize_axes(models.axes(dcfg))
+    return tcfg, tparams, dcfg, dparams, daxes
+
+
+def run_spec_pair(mesh) -> dict:
+    """The decode-heavy trace through the paged engine, speculation off
+    then on. Both runs serve the same target weights, so greedy outputs
+    must match token-for-token (every committed token is the target's own
+    argmax — the draft only decides how many commit per round); the spec
+    run must clear >= 1.5x aggregate tokens/sec and stay plan-warm (draft
+    admit/propose and the (slots, k+1) verify are in the warm-up set)."""
+    tcfg, tparams, dcfg, dparams, daxes = _spec_models()
+    common = dict(num_slots=NUM_SLOTS, max_len=SPEC_MAX_LEN,
+                  prompt_pad=PROMPT_PAD, kv_block_size=KV_BLOCK,
+                  prefill_chunk=SPEC_CHUNK)
+    base = ServeEngine(tcfg, mesh, tparams, **common)
+    warm = base.plan_warmup()
+    base_out = _engine_result(base, tcfg, warm, trace_fn=_spec_trace)
+    spec = ServeEngine(tcfg, mesh, tparams, **common,
+                       spec_draft_cfg=dcfg, spec_draft_params=dparams,
+                       spec_k=SPEC_K, spec_draft_param_axes=daxes,
+                       spec_draft_quant="int8")
+    warm_sp = spec.plan_warmup()
+    spec_out = _engine_result(spec, tcfg, warm_sp, trace_fn=_spec_trace)
+    sp = spec_out["metrics"]["speculation"]
+    return {
+        "base": base_out,
+        "spec": spec_out,
+        "speculation": sp,
+        "speedup": (spec_out["tokens_per_sec"]
+                    / base_out["tokens_per_sec"]),
+        "token_match": (spec_out["tokens_by_request"]
+                        == base_out["tokens_by_request"]),
+        "acceptance_rate": sp["acceptance_rate"],
+        "spec_k": SPEC_K,
+        "target_layers": SPEC_LAYERS,
+        "requests": SPEC_N,
+    }
+
+
 def _slo_trace(cfg):
     return bursty_trace(SLO_N, vocab_size=cfg.vocab_size,
                         burst_size=SLO_BURST, burst_gap_s=SLO_GAP_S,
@@ -296,6 +406,7 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
         paged = run_paged(cfg, mesh, params)
         prefix = run_prefix_pair(cfg, mesh, params)
         slo = run_slo_pair(cfg, mesh, params)
+        spec = run_spec_pair(mesh)
     speedup = engine["tokens_per_sec"] / static["tokens_per_sec"]
     token_match = (paged["tokens_by_request"] == engine["tokens_by_request"])
     mem_ratio = paged["block_pool"]["memory_ratio"]
@@ -326,11 +437,19 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
          f"resume={slo['edf']['resumes']} "
          f"match={slo['token_match']} ticks={slo['ticks_ratio']:.2f}x "
          f"steady={slo['edf']['plan_cache']['steady_state']}")
+    spd = spec["speedup"]
+    emit(f"serve/spec,{spec['spec']['wall_s']*1e6/spec['spec']['useful_tokens']:.1f},"
+         f"tput={spec['spec']['tokens_per_sec']:.1f}tok/s "
+         f"speedup={spd:.2f}x accept={spec['acceptance_rate']:.2f} "
+         f"match={spec['token_match']} "
+         f"steady={spec['spec']['plan_cache']['steady_state']}")
     for r in (engine, paged, prefix["off"], prefix["on"],
-              slo["fifo"], slo["edf"]):
+              slo["fifo"], slo["edf"], spec["base"], spec["spec"]):
         r.pop("tokens_by_request")  # parity input, noise in the JSON
     result = {"static": static, "engine": engine, "paged": paged,
-              "prefix": prefix, "slo": slo,
+              "prefix": prefix, "slo": slo, "spec": spec,
+              "spec_speedup": spd,
+              "spec_token_match": spec["token_match"],
               "speedup": speedup, "paged_token_match": token_match,
               "paged_memory_ratio": mem_ratio,
               "prefix_token_match": prefix["token_match"],
@@ -386,6 +505,20 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
             raise SystemExit(
                 f"SLO policies diverged in total work: EDF took "
                 f"{slo['ticks_ratio']:.2f}x FIFO's ticks (bound: 5%)")
+        if not spec["token_match"]:
+            raise SystemExit("speculative run diverged from the "
+                             "non-speculative engine (verify/rewind broke "
+                             "greedy token parity)")
+        if not (spec["base"]["plan_cache"]["steady_state"]
+                and spec["spec"]["plan_cache"]["steady_state"]):
+            raise SystemExit("a spec-pair engine loop was not plan-warm")
+        if spec["acceptance_rate"] <= 0.0:
+            raise SystemExit("draft proposals were never accepted — the "
+                             "speculation path degenerated to verify-only")
+        if spd < 1.5:
+            raise SystemExit(
+                f"speculation speedup {spd:.2f}x below the 1.5x bar "
+                f"(acceptance {spec['acceptance_rate']:.2f}, k={SPEC_K})")
     return result
 
 

@@ -135,6 +135,21 @@ def add_serve_engine_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
         "--top-p", type=float, default=1.0, metavar="P",
         help="nucleus sampling mass (with --temperature > 0)")
     g.add_argument(
+        "--spec-draft-config", default=None, metavar="ARCH",
+        help="enable speculative decoding: draft-model architecture "
+             "(repro.configs name) that proposes tokens for the target to "
+             "verify in one batched pass (paged engine, greedy only; "
+             "--smoke shrinks the draft alongside the target)")
+    g.add_argument(
+        "--spec-k", type=int, default=4, metavar="K",
+        help="speculation depth: draft proposes K tokens per lane per "
+             "round, target verifies K+1 positions (default 4)")
+    g.add_argument(
+        "--spec-draft-quantize", default="int8", choices=["none", "int8"],
+        help="quantize the draft's weights once at load (int8 prequant, "
+             "same path as --quantize; default int8 — the draft exists "
+             "to be cheap)")
+    g.add_argument(
         "--metrics-json", default=None, metavar="PATH",
         help="write the engine's serve metrics JSON here")
     g.add_argument(

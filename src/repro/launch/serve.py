@@ -34,7 +34,10 @@ pool sized by ``--num-kv-blocks``); ``--temperature``/``--top-p`` enable
 host-side per-request-seeded sampling. ``--prefix-cache`` (paged only)
 shares prompt-prefix KV across requests through the radix trie
 (``--prefix-cache-blocks`` caps it) and serves a shared-header trace so
-the dedup is visible in the metrics. See docs/serving.md.
+the dedup is visible in the metrics. ``--spec-draft-config`` (paged,
+greedy only) adds speculative decoding lanes: an int8-prequantized draft
+proposes ``--spec-k`` tokens per slot, the target verifies them in one
+batched pass, rejected tails rewind in place. See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -137,6 +140,28 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
     if args.sched_policy in ("priority", "edf") and not args.kv_block_size:
         raise SystemExit(f"--sched-policy {args.sched_policy} preempts via "
                          "the paged pool: pass --kv-block-size too")
+    spec_kwargs = {}
+    if args.spec_draft_config:
+        if not args.kv_block_size:
+            raise SystemExit("--spec-draft-config needs the paged engine: "
+                             "pass --kv-block-size too")
+        if args.temperature > 0:
+            raise SystemExit("speculative decoding verifies greedy argmax "
+                             "chains: --temperature must be 0")
+        dcfg = C.get_config(args.spec_draft_config)
+        if args.smoke:
+            dcfg = C.smoke(dcfg)
+        dparams = models.init(jax.random.PRNGKey(0), dcfg)
+        daxes, dquant = None, None
+        if args.spec_draft_quantize == "int8":
+            # same once-at-load prequant recipe as the target's --quantize
+            dparams = prequant.quantize_params(dparams)
+            daxes = prequant.quantize_axes(models.axes(dcfg))
+            dquant = "int8"
+        spec_kwargs = dict(
+            spec_draft_cfg=dcfg, spec_draft_params=dparams,
+            spec_k=args.spec_k, spec_draft_param_axes=daxes,
+            spec_draft_quant=dquant)
     gen = args.max_new_tokens or args.gen
     plen = args.prompt_len
     stop = (args.eos_id,) if args.eos_id is not None else ()
@@ -188,7 +213,8 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
         sched_policy=args.sched_policy,
         ttft_target_ms=args.ttft_target_ms,
         max_prefill_chunks=args.max_prefill_chunks,
-        clock=(SimClock(args.sim_clock) if args.sim_clock else None))
+        clock=(SimClock(args.sim_clock) if args.sim_clock else None),
+        **spec_kwargs)
     if not args.no_warmup:
         t0 = time.perf_counter()
         warm = engine.plan_warmup()
@@ -213,6 +239,15 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
               f"{bp['memory_ratio']:.2f}x contiguous, "
               f"{m.deferred_admissions} deferred admissions, "
               f"peak internal frag {bp['peak_fragmentation_tokens']} tokens")
+    if m.speculation.get("enabled"):
+        sp = m.speculation
+        print(f"[spec] draft={sp['draft_arch']}"
+              + (f"({sp['draft_quant']})" if sp.get("draft_quant") else "")
+              + f" k={sp['spec_k']}: {sp['rounds']} rounds, accepted "
+              f"{sp['accepted_tokens']}/{sp['proposed_tokens']} proposals "
+              f"({sp['acceptance_rate']:.2f}), "
+              f"{sp['mean_committed_per_round']:.2f} tokens/round, "
+              f"draft {sp['draft_s']:.2f}s / verify {sp['verify_s']:.2f}s")
     if m.prefix_cache:
         px = m.prefix_cache
         print(f"[prefix-cache] hit {px['hit_tokens']}/{px['lookup_tokens']} "

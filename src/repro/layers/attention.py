@@ -488,6 +488,79 @@ def paged_decode_attention(
     return out, new_cache
 
 
+def paged_verify_attention(
+    p: AttnParams, x: jax.Array, cache: PagedKVCache, *,
+    rope_theta: float = 10000.0, use_rope: bool = True,
+    active: jax.Array | None = None,
+) -> tuple[jax.Array, PagedKVCache]:
+    """Speculative-verify step: S candidate tokens per slot in one pass.
+
+    ``x`` is (B, S, d) — for every lane, the last committed token followed
+    by the draft's S-1 proposals. All S keys/values scatter into the slot's
+    pool blocks at logical positions ``length..length+S-1``, then each
+    query attends causally through the block table — so position i's
+    scores match what i sequential :func:`paged_decode_attention` steps
+    would compute for the same tokens, and greedy acceptance against these
+    logits is token-for-token identical to non-speculative decode.
+
+    Write-side safety differs from the single-step path in one way: a
+    lane's tail positions can run past the blocks it owns (the last
+    committed tokens of a round land within budget, but the rejected tail
+    may not). Table rows are null-padded past the owned region, and
+    positions beyond the table entirely (``>= max_blocks * block_size``)
+    are redirected to the null block explicitly — without that guard the
+    ``min(pos // bs, mb - 1)`` clamp would alias an out-of-range write
+    onto the last owned block. Causality keeps any committable query from
+    ever attending a spilled key. Rejected in-range tails are simply
+    overwritten when the next round re-feeds those positions.
+
+    The returned length advances every slot by S; as with decode, the
+    caller (``lm.verify_step``) owns the actual advance (masked by
+    ``active``) and the engine rewinds rejected tails host-side.
+    """
+    B, S, _ = x.shape
+    nb, bs, n_kv, hd = cache.k.shape
+    mb = cache.table.shape[1]
+    q = cm.dense(x, p.wq, p.bq).reshape(B, S, -1, hd)
+    k = cm.dense(x, p.wk, p.bk).reshape(B, S, n_kv, hd)
+    v = cm.dense(x, p.wv, p.bv).reshape(B, S, n_kv, hd)
+    pos = cache.length[:, None] + jnp.arange(S)[None, :]   # (B, S)
+    if use_rope:
+        sin, cos = cm.rotary_embedding(pos.astype(jnp.float32),
+                                       hd, rope_theta)
+        q = cm.apply_rotary(q, sin, cos)
+        k = cm.apply_rotary(k, sin, cos)
+    rows = jnp.arange(B)[:, None]
+    ti = jnp.minimum(pos // bs, mb - 1)
+    blk = cache.table[rows, ti]                            # (B, S)
+    spill = pos >= mb * bs
+    if active is not None:
+        spill = spill | ~active.astype(bool)[:, None]
+    blk = jnp.where(spill, 0, blk)                         # null-block spill
+    ck = cache.k.at[blk, pos % bs].set(k.astype(cache.k.dtype), mode="drop")
+    cv = cache.v.at[blk, pos % bs].set(v.astype(cache.v.dtype), mode="drop")
+    new_cache = PagedKVCache(k=ck, v=cv, table=cache.table,
+                             length=cache.length + S)
+    gk = ck[cache.table].reshape(B, mb * bs, n_kv, hd)
+    gv = cv[cache.table].reshape(B, mb * bs, n_kv, hd)
+    n_heads = q.shape[2]
+    scale = hd ** -0.5
+    kr = _repeat_kv(gk, n_heads // n_kv)
+    vr = _repeat_kv(gv, n_heads // n_kv)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", (q * jnp.asarray(scale, q.dtype)).astype(kr.dtype),
+        kr, preferred_element_type=jnp.float32,
+    )
+    kpos = jnp.arange(mb * bs)
+    valid = kpos[None, None, :] <= pos[:, :, None]         # (B, S, K) causal
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", prob.astype(vr.dtype), vr,
+                   preferred_element_type=jnp.float32)
+    out = cm.dense(o.reshape(B, S, -1).astype(x.dtype), p.wo)
+    return out, new_cache
+
+
 def cross_attention(
     p: AttnParams, x: jax.Array, kv_src: jax.Array, *,
     n_heads: int, n_kv_heads: int, head_dim: int, chunk: int | None = None,

@@ -96,6 +96,15 @@ def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, slot, start,
                             mesh=mesh)
 
 
+def verify_step(params, tokens, cfg: ModelConfig, state, mesh=None,
+                active=None):
+    if cfg.family not in _LM_FAMILIES:
+        raise ValueError(
+            f"speculative verify is LM-family only, not {cfg.family!r}")
+    return lm.verify_step(params, tokens, cfg, state, mesh=mesh,
+                          active=active)
+
+
 def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
                 active=None):
     if cfg.family in _LM_FAMILIES:
@@ -117,5 +126,5 @@ def param_count(params) -> int:
 
 __all__ = [
     "init", "axes", "forward", "lm_loss", "init_decode_state", "prefill",
-    "prefill_chunk", "decode_step", "param_count",
+    "prefill_chunk", "decode_step", "verify_step", "param_count",
 ]

@@ -602,6 +602,69 @@ def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, slot, start,
     return _logits(params, cfg, h_last)[:, 0], new_state
 
 
+def verify_step(params, tokens, cfg: ModelConfig, state, mesh=None,
+                active=None):
+    """Speculative-verify step: S candidate tokens per lane in one pass.
+
+    ``tokens`` is (B, S): per slot, the last committed token followed by
+    the draft model's S-1 proposals. Returns (logits (B, S, Vp), new
+    state) — the logits at *every* fed position, so the engine's greedy
+    acceptance can compare each proposal against the target's own argmax
+    at the same position. All S keys/values are written through the block
+    table (``attn.paged_verify_attention``) and every active lane's
+    length advances by S; the engine rewinds the rejected tail host-side
+    (blocks were allocated at budget, so rewind never touches the
+    allocator).
+
+    Paged per-slot state only — speculation rides the paged engine. For
+    MoE the active-lane mask broadcasts over the S candidate positions
+    (all fed tokens of a live lane are real; a vacant lane's pads must
+    not compete for expert capacity, same rule as ``decode_step``).
+    """
+    cm.set_activation_mesh(mesh)
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"speculative verify needs a KV-cache family, not {cfg.family!r}")
+    kv = state["kv"]
+    if not isinstance(kv, attn.PagedKVCache):
+        raise ValueError("verify_step requires a paged decode state "
+                         "(init_decode_state with kv_block_size)")
+    x = cm.embed_lookup(params["embed"], tokens, mesh).astype(cfg.dtype)
+    B, S = tokens.shape
+
+    def body(carry, inp):
+        x = carry
+        lp, ck, cv = inp
+        h = apply_norm(cfg, lp["ln1"], x)
+        cache = attn.PagedKVCache(k=ck, v=cv, table=kv.table,
+                                  length=kv.length)
+        y, nc = attn.paged_verify_attention(
+            lp["attn"], h, cache, rope_theta=cfg.rope_theta, active=active)
+        x = x + y
+        h2 = apply_norm(cfg, lp["ln2"], x)
+        if cfg.family == "moe":
+            y2, _ = moe_lib.moe_ffn(
+                lp["moe"], h2, mesh=mesh, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                activation=cfg.activation,
+                token_mask=(None if active is None
+                            else jnp.broadcast_to((active > 0)[:, None],
+                                                  (B, S))))
+            if cfg.dense_residual:
+                y2 = y2 + mlp_lib.mlp(lp["mlp"], h2,
+                                      activation=cfg.activation)
+        else:
+            y2 = mlp_lib.mlp(lp["mlp"], h2, activation=cfg.activation)
+        return cm.hint(x + y2, "dp", None, "model"), (nc.k, nc.v)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
+    step = S if active is None else S * active.astype(kv.length.dtype)
+    new_state = {**state, "kv": attn.PagedKVCache(
+        k=nk, v=nv, table=kv.table, length=kv.length + step)}
+    h = apply_norm(cfg, params["final_norm"], x)
+    return _logits(params, cfg, h), new_state
+
+
 def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
                 active=None):
     """One decode step. tokens (B, 1) -> (logits (B, Vp), new state).

@@ -10,7 +10,10 @@ shared prompt prefixes across requests over those same block tables
 (ref-counted blocks, radix-trie index, LRU reclaim); ``policy`` orders
 admission (fifo/priority/edf/prefix), preempts lower-ranked decodes under
 pressure and adapts the per-tick prefill budget to a TTFT target;
-``engine`` runs the tick loop and ``metrics`` reports it.
+``spec`` holds the speculative-decoding acceptance rule and rollback math
+(an int8 draft model proposes k tokens per lane, the target verifies them
+in one batched pass — ``make_spec_step``); ``engine`` runs the tick loop
+and ``metrics`` reports it.
 """
 from repro.serve.blockpool import BlockPool, blocks_for
 from repro.serve.engine import ServeEngine, chunk_buckets
@@ -23,6 +26,8 @@ from repro.serve.prefixcache import PrefixCache
 from repro.serve.request import (Request, RequestState, bursty_trace,
                                  shared_prefix_trace, synthetic_trace)
 from repro.serve.scheduler import SlotScheduler
+from repro.serve.spec import (SpecStats, accept_prefix, draft_sync,
+                              verify_rewind)
 
 __all__ = [
     "ServeEngine", "EngineMetrics", "Request", "RequestState",
@@ -30,5 +35,6 @@ __all__ = [
     "chunk_buckets", "synthetic_trace", "shared_prefix_trace",
     "bursty_trace", "SchedPolicy", "FifoPolicy", "PriorityPolicy",
     "EdfPolicy", "PrefixAffinityPolicy", "POLICIES", "get_policy",
-    "BudgetController", "SimClock",
+    "BudgetController", "SimClock", "SpecStats", "accept_prefix",
+    "verify_rewind", "draft_sync",
 ]

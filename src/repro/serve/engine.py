@@ -59,7 +59,9 @@ from repro.serve.policy import BudgetController, SchedPolicy, get_policy
 from repro.serve.prefixcache import PrefixCache
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
-from repro.train.servestep import make_engine_step, make_paged_engine_step
+from repro.serve import spec as spec_lib
+from repro.train.servestep import (
+    make_engine_step, make_paged_engine_step, make_spec_step)
 
 
 def chunk_buckets(chunk: int) -> tuple[int, ...]:
@@ -96,6 +98,11 @@ class ServeEngine:
         ttft_target_ms: float | None = None,
         max_prefill_chunks: int = 4,
         clock=None,
+        spec_draft_cfg: ModelConfig | None = None,
+        spec_draft_params=None,
+        spec_k: int = 4,
+        spec_draft_param_axes=None,
+        spec_draft_quant: str | None = None,
     ):
         self.cfg = cfg
         self.mesh = mesh
@@ -115,6 +122,36 @@ class ServeEngine:
         # the event sequence
         self._now = clock if clock is not None else time.perf_counter
         self.paged = bool(kv_block_size)
+        self.spec = spec_draft_cfg is not None
+        self.spec_k = int(spec_k) if self.spec else 0
+        self.spec_draft_cfg = spec_draft_cfg
+        self.spec_draft_params = spec_draft_params
+        self.spec_draft_quant = spec_draft_quant
+        if self.spec:
+            if spec_draft_params is None:
+                raise ValueError(
+                    "speculative decoding needs draft params "
+                    "(spec_draft_params) alongside spec_draft_cfg")
+            if not self.paged:
+                raise ValueError(
+                    "speculative decoding rewinds per-slot lengths over "
+                    "budget-allocated blocks — it needs the paged engine "
+                    "(kv_block_size)")
+            if temperature and temperature > 0.0:
+                raise ValueError(
+                    f"speculative decoding verifies greedily; engine "
+                    f"temperature={temperature} is incompatible (submit-"
+                    f"time validation rejects per-request sampling too)")
+            if self.sched_policy.preemptive:
+                raise ValueError(
+                    f"policy {self.sched_policy.name!r} preempts mid-"
+                    f"decode; speculative lanes don't support preemption "
+                    f"yet — use a non-preemptive policy (fifo/prefix)")
+            if spec_draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab_size={spec_draft_cfg.vocab_size} != "
+                    f"target vocab_size={cfg.vocab_size} — proposals must "
+                    f"share the token space")
         if prefix_cache and not self.paged:
             raise ValueError(
                 "the prefix cache shares KV at block granularity — it "
@@ -160,6 +197,21 @@ class ServeEngine:
                 lambda: models.init_decode_state(cfg, num_slots, max_len,
                                                  per_slot=True),
                 out_shardings=self.art.state_shardings)
+        if self.spec:
+            draft_shapes = (None if spec_draft_param_axes is None
+                            else jax.eval_shape(lambda: spec_draft_params))
+            self.spec_art = make_spec_step(
+                cfg, spec_draft_cfg, mesh, num_slots=num_slots,
+                max_len=max_len, prompt_pad=prompt_pad, spec_k=self.spec_k,
+                target_art=self.art, draft_param_shapes=draft_shapes,
+                draft_param_axes=spec_draft_param_axes)
+            self._draft_init_fn = jax.jit(
+                lambda: models.init_decode_state(
+                    spec_draft_cfg, num_slots, max_len, per_slot=True),
+                out_shardings=self.spec_art.draft_state_shardings)
+        else:
+            self.spec_art = None
+            self._draft_init_fn = None
         self._warmed = False
         self.reset()
 
@@ -186,7 +238,19 @@ class ServeEngine:
                  if self.prefix_cache_enabled else None)
         self.sched = SlotScheduler(self.num_slots, max_len=self.max_len,
                                    pool=pool, prefix_cache=cache,
-                                   policy=self.sched_policy)
+                                   policy=self.sched_policy,
+                                   spec=self.spec)
+        if self.spec:
+            with self.mesh:
+                self.draft_state = self._draft_init_fn()
+            # per-lane draft bookkeeping: lag marks lanes whose draft KV
+            # is one token behind the committed stream (a fully-accepted
+            # round's last proposal was never fed back); catch_tok is
+            # that token, re-ingested by the next propose call
+            self._lag = np.zeros((self.num_slots,), bool)
+            self._catch_tok = np.full((self.num_slots,), self.pad_id,
+                                      np.int64)
+            self.spec_stats = spec_lib.SpecStats(spec_k=self.spec_k)
         self.budget = BudgetController(
             None if self.ttft_target_ms is None
             else self.ttft_target_ms / 1e3,
@@ -214,6 +278,12 @@ class ServeEngine:
                 chunk_buckets=list(self.chunk_buckets),
                 prefix_cache=self.prefix_cache_enabled,
                 prefix_cache_blocks=self.prefix_cache_blocks)
+        engine_info["spec"] = self.spec
+        if self.spec:
+            engine_info.update(
+                spec_k=self.spec_k,
+                spec_draft_arch=self.spec_draft_cfg.name,
+                spec_draft_quant=self.spec_draft_quant)
         self.metrics = EngineMetrics(engine=engine_info)
 
     # ------------------------------------------------------------ warm-up
@@ -244,6 +314,25 @@ class ServeEngine:
                                self.art.state_shapes, prompt, scalar, scalar)
             jax.eval_shape(self.art.decode_raw, self.params,
                            self.art.state_shapes, toks, active)
+            if self.spec:
+                # the draft is a second GemmContext-resolved model sharing
+                # the tick loop: its admit + fused propose signatures and
+                # the target's (num_slots, k+1) verify pass all join the
+                # warm set, so zero lazy solves holds with speculation on
+                vtoks = jax.ShapeDtypeStruct(
+                    (self.num_slots, self.spec_k + 1), jnp.int32)
+                jax.eval_shape(self.spec_art.verify_raw, self.params,
+                               self.art.state_shapes, vtoks, active)
+                dprompt = jax.ShapeDtypeStruct((1, self.prompt_pad),
+                                               jnp.int32)
+                jax.eval_shape(self.spec_art.draft_admit_raw,
+                               self.spec_draft_params,
+                               self.spec_art.draft_state_shapes,
+                               dprompt, scalar, scalar)
+                jax.eval_shape(self.spec_art.propose_raw,
+                               self.spec_draft_params,
+                               self.spec_art.draft_state_shapes,
+                               toks, active, toks, active)
         self._warmed = True
         solved = cache.stats.warm_solves - before.warm_solves
         signatures = len(cache.warm_keys)
@@ -256,6 +345,11 @@ class ServeEngine:
             raise ValueError(
                 f"prompt_len={request.prompt_len} exceeds the engine's "
                 f"prompt_pad={self.prompt_pad}")
+        if self.spec and request.prompt_len > self.prompt_pad:
+            raise ValueError(
+                f"prompt_len={request.prompt_len} exceeds prompt_pad="
+                f"{self.prompt_pad}: the speculative draft model admits "
+                f"prompts in one padded shot even on the paged engine")
         return self.sched.submit(
             request, now_s if now_s is not None else self._rel_now())
 
@@ -341,12 +435,32 @@ class ServeEngine:
 
     def _bind_admissions(self, now: float) -> int:
         """Paged path: bind queue heads to free lanes + allocate their KV
-        blocks. No device work — prompts prefill chunk by chunk over the
-        following ticks."""
+        blocks. No device work for the target — prompts prefill chunk by
+        chunk over the following ticks. With speculation on, each
+        admission also one-shot prefills the *draft* model's contiguous
+        per-slot cache (the draft is independent of the target's prefix
+        cache — it always ingests the full prompt)."""
         n = 0
-        while self.sched.admit_next(now) is not None:
+        while True:
+            st = self.sched.admit_next(now)
+            if st is None:
+                return n
             n += 1
-        return n
+            if self.spec:
+                self._draft_admit(st)
+
+    def _draft_admit(self, st: RequestState) -> None:
+        """Prefill the draft model for a newly admitted lane. Overwrites
+        whatever the slot's previous occupant left in the draft cache and
+        resets the lane's lag bookkeeping."""
+        req = st.request
+        prompt = np.full((1, self.prompt_pad), self.pad_id, np.int32)
+        prompt[0, : req.prompt_len] = req.prompt
+        _, self.draft_state = self.spec_art.draft_admit_fn(
+            self.spec_draft_params, self.draft_state, jnp.asarray(prompt),
+            jnp.asarray(st.slot, jnp.int32),
+            jnp.asarray(req.prompt_len, jnp.int32))
+        self._lag[st.slot] = False
 
     def _chunk_shape(self, remaining: int) -> tuple[int, int]:
         """(bucket_len, true_len) for the next prefill chunk."""
@@ -386,6 +500,91 @@ class ServeEngine:
         self._first_token(st, np.asarray(logits), self._rel_now())
         return 1
 
+    def _spec_round(self, mask: np.ndarray) -> int:
+        """One speculative decode round for the decode-ready lanes: a
+        fused k-step draft propose, one batched (num_slots, k + 1) target
+        verify, then host-side greedy acceptance per lane.
+
+        Commit/rollback per lane (serve/spec.py holds the math): every
+        committed token is the target's own argmax at its position, so
+        output is token-for-token identical to non-speculative decode;
+        the rejected tail rewinds both models' per-slot lengths host-side
+        (blocks were allocated at budget — the allocator is untouched).
+        Two device dispatches commit up to k + 1 tokens per lane."""
+        k = self.spec_k
+        t0 = time.perf_counter()
+        start_toks = np.where(mask, self._next_tok, self.pad_id)
+        catch_mask = mask & self._lag
+        proposals, self.draft_state = self.spec_art.propose_fn(
+            self.spec_draft_params, self.draft_state,
+            jnp.asarray(self._catch_tok[:, None], jnp.int32),
+            jnp.asarray(catch_mask, jnp.int32),
+            jnp.asarray(start_toks[:, None], jnp.int32),
+            jnp.asarray(mask, jnp.int32))
+        np_props = np.asarray(proposals)                   # (num_slots, k)
+        t1 = time.perf_counter()
+        fed = np.concatenate(
+            [start_toks[:, None],
+             np.where(mask[:, None], np_props, self.pad_id)],
+            axis=1)                                        # (num_slots, k+1)
+        logits, self.state = self.spec_art.verify_fn(
+            self.params, self.state, jnp.asarray(fed, jnp.int32),
+            jnp.asarray(mask, jnp.int32))
+        np_logits = np.asarray(logits)             # (num_slots, k+1, Vp)
+        t2 = time.perf_counter()
+        self.spec_stats.draft_s += t1 - t0
+        self.spec_stats.verify_s += t2 - t1
+        now = self._rel_now()
+        # post-verify device lengths: every active lane advanced by k+1;
+        # the acceptance walk decides how far each rolls back
+        tgt_len = np.asarray(self.state["kv"].length).copy()
+        drf_len = np.asarray(self.draft_state["kv"].length).copy()
+        produced = 0
+        for slot in np.flatnonzero(mask):
+            st = self.sched.slots[slot]
+            self.sched.advance_written(slot, k + 1)
+            greedy = spec_lib.greedy_rows(np_logits[slot],
+                                          self.cfg.vocab_size)
+            committed, n_accepted = spec_lib.accept_prefix(
+                np_props[slot], greedy)
+            finished = False
+            n_committed = 0
+            for i, tok in enumerate(committed):
+                st.append(tok, now, tick=self.sched.tick)
+                self._next_tok[slot] = tok
+                n_committed += 1
+                produced += 1
+                reason = ("length" if len(st.tokens) >= self._budget(st)
+                          else st.should_stop())
+                if reason:
+                    # committed[0..n_accepted-1] are accepted proposals,
+                    # committed[n_accepted] the bonus: a finish at index i
+                    # used min(i + 1, n_accepted) proposals
+                    n_accepted = min(n_accepted, i + 1)
+                    self._finish(st, reason, now)
+                    finished = True
+                    break
+            self.spec_stats.record_round(k, n_accepted, n_committed)
+            if finished:
+                continue
+            # target KV must cover all committed tokens except the newest
+            rewind = spec_lib.verify_rewind(k, n_accepted)
+            self.sched.rewind(slot, rewind)
+            tgt_len[slot] -= rewind
+            committed_len = st.request.prompt_len + len(st.tokens)
+            drf_len[slot], lag = spec_lib.draft_sync(
+                committed_len, n_accepted, k)
+            self._lag[slot] = lag
+            if lag:
+                self._catch_tok[slot] = st.tokens[-2]
+        kv = self.state["kv"]
+        self.state["kv"] = kv._replace(
+            length=jnp.asarray(tgt_len, jnp.int32))
+        dkv = self.draft_state["kv"]
+        self.draft_state["kv"] = dkv._replace(
+            length=jnp.asarray(drf_len, jnp.int32))
+        return produced
+
     def tick(self) -> int:
         """One engine tick: deadline sweep, admissions (plus, paged, up to
         ``budget.chunks_per_tick()`` prefill chunks), then one masked
@@ -408,7 +607,9 @@ class ServeEngine:
             produced = self._admit_all(now)
         mask = self.sched.decode_mask()
         ready = int(mask.sum())
-        if ready:
+        if ready and self.spec:
+            produced += self._spec_round(mask)
+        elif ready:
             toks = np.where(mask, self._next_tok, self.pad_id)
             logits, self.state = self.art.decode_fn(
                 self.params, self.state,
@@ -485,6 +686,10 @@ class ServeEngine:
         self.metrics.budget = self.budget.stats()
         if self.sched.prefix_cache is not None:
             self.metrics.record_prefix_cache(self.sched.prefix_cache)
+        if self.spec:
+            self.metrics.record_speculation(
+                self.spec_stats, draft_arch=self.spec_draft_cfg.name,
+                draft_quant=self.spec_draft_quant)
         return self.metrics
 
     @property

@@ -30,9 +30,24 @@ Schema (``EngineMetrics.to_dict``, documented in docs/serving.md):
                    inserted_blocks, duplicate_blocks, cached_blocks,
                    cached_idle_blocks, reclaimed_blocks, trimmed_blocks,
                    max_cached_blocks},   # --prefix-cache only
+  "speculation": {enabled, spec_k, draft_arch, draft_quant, rounds,
+                  proposed_tokens, accepted_tokens, bonus_tokens,
+                  committed_tokens, acceptance_rate, mean_accepted_len,
+                  mean_committed_per_round, draft_s, verify_s},
+                  # --spec-draft-config only ({"enabled": false} otherwise)
   "plan_cache": {hits, misses, lazy_solves, warm_solves, steady_state}
 }
 ```
+
+``speculation``: ``proposed_tokens`` counts draft proposals fed to the
+verify pass; ``accepted_tokens`` those the target's greedy walk kept;
+``bonus_tokens`` the target-argmax commits on top (one per round unless
+a stop/length finish truncates it); ``acceptance_rate`` is accepted /
+proposed and ``mean_accepted_len`` accepted / rounds — together with
+``mean_committed_per_round`` (committed / rounds, up to spec_k + 1) the
+speedup accounting for the benchmark's >= 1.5x gate. ``draft_s`` /
+``verify_s`` split speculative tick wall time between the propose and
+verify dispatches (host ``perf_counter``, not the sim clock).
 
 ``prefix_cache.hit_rate`` is hit_tokens / lookup_tokens — the fraction of
 all admitted prompt tokens whose prefill GEMMs the radix cache skipped
@@ -96,6 +111,8 @@ class EngineMetrics:
     requests: list[dict[str, Any]] = dataclasses.field(default_factory=list)
     block_pool: dict[str, Any] = dataclasses.field(default_factory=dict)
     prefix_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
+    speculation: dict[str, Any] = dataclasses.field(
+        default_factory=lambda: {"enabled": False})
     plan_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------ record
@@ -157,6 +174,15 @@ class EngineMetrics:
         """Snapshot the radix cache's cumulative counters (engine.run calls
         this once per run; the cache object is reset with the engine)."""
         self.prefix_cache = cache.stats()
+
+    def record_speculation(self, stats, *, draft_arch: str | None = None,
+                           draft_quant: str | None = None) -> None:
+        """Snapshot the engine's SpecStats into the ``speculation``
+        section (engine.run, once per run with speculation enabled)."""
+        out = stats.to_dict()
+        out["draft_arch"] = draft_arch
+        out["draft_quant"] = draft_quant
+        self.speculation = out
 
     def record_plan_cache(self, before: PlanCacheStats,
                           after: PlanCacheStats) -> None:
@@ -236,6 +262,7 @@ class EngineMetrics:
             "budget": dict(self.budget),
             "block_pool": dict(self.block_pool),
             "prefix_cache": dict(self.prefix_cache),
+            "speculation": dict(self.speculation),
             "plan_cache": dict(self.plan_cache),
         }
 

@@ -81,6 +81,29 @@ def make_serve_step(
     )
 
 
+def _slot_admit(params, state, prompt, slot, true_len, *, cfg, mesh,
+                prompt_pad):
+    """Prefill ``prompt`` (1, prompt_pad; right-padded) into a fresh
+    single-row state and splice its KV into lane ``slot`` of a per-slot
+    contiguous cache. Shared by the contiguous engine's admit step and
+    the speculative draft model's admit (the draft always keeps a
+    contiguous per-slot cache, independent of the target's layout)."""
+    sub = models.init_decode_state(cfg, 1, prompt_pad)
+    logits, sub = models.prefill(
+        params, {"tokens": prompt}, cfg, sub, mesh=mesh,
+        last_pos=true_len - 1)
+    kv, skv = state["kv"], sub["kv"]
+    start = (0, slot) + (0,) * (kv.k.ndim - 2)
+    new_kv = KVCache(
+        k=jax.lax.dynamic_update_slice(
+            kv.k, skv.k.astype(kv.k.dtype), start),
+        v=jax.lax.dynamic_update_slice(
+            kv.v, skv.v.astype(kv.v.dtype), start),
+        length=kv.length.at[slot].set(true_len),
+    )
+    return logits[0], {**state, "kv": new_kv}
+
+
 @dataclasses.dataclass
 class EngineArtifacts:
     """Compiled step functions for the continuous-batching engine.
@@ -148,20 +171,8 @@ def make_engine_step(
         """Prefill `prompt` (1, prompt_pad; right-padded) and splice its KV
         into lane ``slot`` of the engine cache via dynamic_update_slice on
         the slot axis. Returns the request's first-token logits (Vp,)."""
-        sub = models.init_decode_state(cfg, 1, prompt_pad)
-        logits, sub = models.prefill(
-            params, {"tokens": prompt}, cfg, sub, mesh=mesh,
-            last_pos=true_len - 1)
-        kv, skv = state["kv"], sub["kv"]
-        start = (0, slot) + (0,) * (kv.k.ndim - 2)
-        new_kv = KVCache(
-            k=jax.lax.dynamic_update_slice(
-                kv.k, skv.k.astype(kv.k.dtype), start),
-            v=jax.lax.dynamic_update_slice(
-                kv.v, skv.v.astype(kv.v.dtype), start),
-            length=kv.length.at[slot].set(true_len),
-        )
-        return logits[0], {**state, "kv": new_kv}
+        return _slot_admit(params, state, prompt, slot, true_len,
+                           cfg=cfg, mesh=mesh, prompt_pad=prompt_pad)
 
     decode_fn = jax.jit(
         decode,
@@ -284,6 +295,147 @@ def make_paged_engine_step(
         param_shardings=pshard, state_shardings=sshard,
         state_shapes=state_shapes, chunk_buckets=buckets,
         max_blocks=max_blocks,
+    )
+
+
+@dataclasses.dataclass
+class SpecArtifacts:
+    """Compiled step functions for speculative decoding lanes.
+
+    ``verify_fn(params, state, tokens, active)`` — one batched verify pass
+    of the *target* model: ``tokens`` is (num_slots, spec_k + 1) — per
+    lane, the last committed token plus the draft's k proposals — and the
+    returned logits cover every fed position. ``draft_admit_fn(dparams,
+    dstate, prompt, slot, true_len)`` — one-shot prompt prefill into the
+    draft's contiguous per-slot cache. ``propose_fn(dparams, dstate,
+    catch_tok, catch_active, start_tok, active)`` — one fused jit emitting
+    k greedy draft tokens per lane: a masked catch-up decode (re-ingests
+    the token a fully-accepted round left behind) followed by k unrolled
+    decode steps chained through in-graph argmax, so a speculative tick
+    costs two device dispatches total regardless of k.
+
+    All three are fixed-signature: the engine's plan warm-up traces the
+    raw callables and the serving loop holds the zero-lazy-solve
+    steady-state assertion with speculation enabled.
+    """
+
+    verify_fn: Callable
+    draft_admit_fn: Callable
+    propose_fn: Callable
+    verify_raw: Callable
+    draft_admit_raw: Callable
+    propose_raw: Callable
+    draft_param_shardings: Any
+    draft_state_shardings: Any
+    draft_state_shapes: Any
+    spec_k: int
+
+
+def make_spec_step(
+    cfg: ModelConfig, draft_cfg: ModelConfig, mesh: Mesh, *,
+    num_slots: int, max_len: int, prompt_pad: int, spec_k: int,
+    target_art: PagedEngineArtifacts,
+    draft_param_shapes=None, draft_param_axes=None,
+) -> SpecArtifacts:
+    """Step factory for speculative decoding over the paged engine.
+
+    The target model's verify pass reuses ``target_art``'s param/state
+    shardings (same model, same paged cache — only the token shape
+    changes from (num_slots, 1) to (num_slots, spec_k + 1)). The draft
+    model gets its own contiguous per-slot cache and sharding set —
+    ``draft_param_shapes``/``draft_param_axes`` carry the pre-quantized
+    int8 tree exactly as they do for the main model factories.
+    """
+    if draft_cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"the draft model needs a KV-cache family (dense/moe), "
+            f"got {draft_cfg.family!r}")
+    if spec_k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    if draft_cfg.vocab_size != cfg.vocab_size:
+        raise ValueError(
+            f"draft/target vocab mismatch ({draft_cfg.vocab_size} vs "
+            f"{cfg.vocab_size}) — proposals must share the token space")
+    if not (0 < prompt_pad < max_len):
+        raise ValueError(
+            f"need 0 < prompt_pad ({prompt_pad}) < max_len ({max_len})")
+    daxes = (draft_param_axes if draft_param_axes is not None
+             else models.axes(draft_cfg))
+    if draft_param_shapes is None:
+        draft_param_shapes = jax.eval_shape(
+            lambda: models.init(jax.random.PRNGKey(0), draft_cfg))
+    dpshard = shd.param_shardings(daxes, draft_param_shapes, mesh)
+    dstate_shapes = jax.eval_shape(
+        lambda: models.init_decode_state(draft_cfg, num_slots, max_len,
+                                         per_slot=True))
+    dspecs = shd.decode_state_specs(dstate_shapes, draft_cfg, mesh)
+    dsshard = jax.tree.map(lambda s: NamedSharding(mesh, s), dspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+    vtok_shard = NamedSharding(mesh, shd.batch_specs(
+        {"t": jax.ShapeDtypeStruct((num_slots, spec_k + 1), jnp.int32)},
+        mesh)["t"])
+    dtok_shard = NamedSharding(mesh, shd.batch_specs(
+        {"t": jax.ShapeDtypeStruct((num_slots, 1), jnp.int32)}, mesh)["t"])
+    repl = NamedSharding(mesh, P())
+
+    def verify(params, state, tokens, active):
+        logits, new_state = models.verify_step(
+            params, tokens, cfg, state, mesh=mesh, active=active)
+        return logits, new_state
+
+    def draft_admit(dparams, dstate, prompt, slot, true_len):
+        return _slot_admit(dparams, dstate, prompt, slot, true_len,
+                           cfg=draft_cfg, mesh=mesh, prompt_pad=prompt_pad)
+
+    def propose(dparams, dstate, catch_tok, catch_active, start_tok, active):
+        """k greedy draft proposals per lane, one jit call.
+
+        ``catch_tok``/``catch_active`` re-ingest the token a fully-
+        accepted previous round proposed but never fed back (the draft
+        lags its own KV by one token after an all-k accept); the masked
+        decode advances only the lagging lanes. ``start_tok`` is each
+        lane's last committed token. Greedy chaining is in-graph argmax
+        over the true vocab — the padded tail is never proposed.
+        """
+        _, dstate = models.decode_step(
+            dparams, catch_tok, draft_cfg, dstate, mesh=mesh,
+            active=catch_active)
+        tok = start_tok
+        proposals = []
+        for _ in range(spec_k):
+            logits, dstate = models.decode_step(
+                dparams, tok, draft_cfg, dstate, mesh=mesh, active=active)
+            tok = jnp.argmax(
+                logits[:, : draft_cfg.vocab_size], axis=-1
+            ).astype(jnp.int32)[:, None]
+            proposals.append(tok[:, 0])
+        return jnp.stack(proposals, axis=1), dstate
+
+    verify_fn = jax.jit(
+        verify,
+        in_shardings=(target_art.param_shardings,
+                      target_art.state_shardings, vtok_shard, repl),
+        out_shardings=(repl, target_art.state_shardings),
+        donate_argnums=(1,),
+    )
+    draft_admit_fn = jax.jit(
+        draft_admit,
+        in_shardings=(dpshard, dsshard, repl, repl, repl),
+        out_shardings=(repl, dsshard),
+        donate_argnums=(1,),
+    )
+    propose_fn = jax.jit(
+        propose,
+        in_shardings=(dpshard, dsshard, dtok_shard, repl, dtok_shard, repl),
+        out_shardings=(repl, dsshard),
+        donate_argnums=(1,),
+    )
+    return SpecArtifacts(
+        verify_fn=verify_fn, draft_admit_fn=draft_admit_fn,
+        propose_fn=propose_fn, verify_raw=verify,
+        draft_admit_raw=draft_admit, propose_raw=propose,
+        draft_param_shardings=dpshard, draft_state_shardings=dsshard,
+        draft_state_shapes=dstate_shapes, spec_k=spec_k,
     )
 
 

@@ -222,6 +222,60 @@ def test_scheduler_hard_refuses_request_that_can_never_fit():
     s.submit(_requests([(8, 4)])[0])                # 12 tokens: admissible
 
 
+def test_scheduler_rewind_across_block_boundary_never_frees():
+    """A speculative verify writes past a block boundary, then the round
+    rewinds back across it. Blocks were allocated at budget during
+    admission, so rewind is pure length bookkeeping — the lane's block
+    list and the pool are untouched in both directions."""
+    pool = BlockPool(num_blocks=9, block_size=4)
+    s = SlotScheduler(1, max_len=16, pool=pool)
+    s.submit(_requests([(6, 9)], stop=())[0])       # 15 tokens -> 4 blocks
+    st = s.admit_next()
+    blocks, in_use = list(st.blocks), pool.blocks_in_use
+    s.prefill_advance(st.slot, 6)
+    st.tokens.append(21)                            # off the prefill logits
+    assert st.live_kv_tokens == 7                   # derived (kv_written -1)
+    s.advance_written(st.slot, 4)                   # k+1 = 4 keys written
+    assert st.live_kv_tokens == 11                  # crossed the 8 boundary
+    s.rewind(st.slot, 3)                            # j=0: keep bonus only
+    st.tokens.append(22)                            # the round's one commit
+    assert st.live_kv_tokens == 8 == st.prefill_done + len(st.tokens)
+    assert st.blocks == blocks and pool.blocks_in_use == in_use
+    assert s.counters()["block_pool"]["frees"] == 0
+    with pytest.raises(ValueError):
+        s.rewind(st.slot, 99)                       # beyond written length
+    with pytest.raises(ValueError):
+        s.advance_written(st.slot, -1)
+    s.evict(st.slot, "stop")
+    with pytest.raises(ValueError):
+        s.rewind(0, 1)                              # vacant lane
+
+
+def test_scheduler_rewind_then_preempt_resets_tracking():
+    """Preempting a lane mid-speculation drops the explicit KV tracking:
+    the requeued request resumes from its committed tokens (prompt +
+    generated snapshot), and the rewound tail is as if it never ran."""
+    pool = BlockPool(num_blocks=9, block_size=4)
+    s = SlotScheduler(1, max_len=16, pool=pool)
+    s.submit(_requests([(4, 8)], stop=())[0])       # 12 tokens -> 3 blocks
+    st = s.admit_next()
+    s.prefill_advance(st.slot, 4)
+    st.tokens.append(7)
+    s.advance_written(st.slot, 3)                   # k=2 round in flight
+    st.tokens.extend([8, 9])                        # j=1: two commits
+    s.rewind(st.slot, 1)
+    assert st.kv_written == 7 == st.prefill_done + len(st.tokens)
+    back = s.preempt(st.slot)
+    assert back is st and st.kv_written == -1       # tracking dropped
+    assert pool.blocks_in_use == 0                  # blocks returned
+    again = s.admit_next()
+    assert again is st
+    assert st.resumed_tokens == 3                   # resume covers commits
+    assert st.live_kv_tokens == 0                   # derived again, pre-fill
+    s.prefill_advance(st.slot, 7)                   # prompt + 3 generated
+    assert st.live_kv_tokens == 7                   # converges to committed
+
+
 def test_scheduler_prefill_head_tracks_admission_order():
     pool = BlockPool(num_blocks=9, block_size=4)
     s = SlotScheduler(2, max_len=12, pool=pool)

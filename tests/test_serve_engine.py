@@ -160,6 +160,36 @@ def test_engine_metrics_export(dense_setup, tmp_path):
     assert d["budget"]["target_ttft_s"] is None
     assert d["budget"]["final_chunks"] == 1  # no target: pinned at min
     assert d["prefix_cache"] == {}           # section always exported
+    assert d["speculation"] == {"enabled": False}   # same
+    assert d["plan_cache"]["steady_state"] is True
+
+
+def test_engine_metrics_speculation_schema(dense_setup, tmp_path):
+    """Schema check for the speculation section (docs/serving.md): every
+    counter the CI spec smoke asserts on is present and consistent."""
+    cfg, mesh, params = dense_setup
+    engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=24,
+                         prompt_pad=8, kv_block_size=8,
+                         spec_draft_cfg=cfg, spec_draft_params=params,
+                         spec_k=2, spec_draft_quant=None)
+    engine.plan_warmup()
+    m = engine.run(_requests([(8, 4), (4, 6), (6, 3)]))
+    d = json.loads(m.to_json(str(tmp_path / "metrics.json")))
+    assert d["engine"]["spec"] is True
+    assert d["engine"]["spec_k"] == 2
+    sp = d["speculation"]
+    for key in ("enabled", "spec_k", "rounds", "proposed_tokens",
+                "accepted_tokens", "bonus_tokens", "committed_tokens",
+                "acceptance_rate", "mean_accepted_len",
+                "mean_committed_per_round", "draft_s", "verify_s",
+                "draft_arch"):
+        assert key in sp, key
+    assert sp["enabled"] is True and sp["spec_k"] == 2
+    assert sp["proposed_tokens"] == sp["rounds"] * 2
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+    assert sp["committed_tokens"] == (sp["accepted_tokens"]
+                                      + sp["bonus_tokens"])
+    assert sp["draft_arch"] == cfg.name
     assert d["plan_cache"]["steady_state"] is True
 
 

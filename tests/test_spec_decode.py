@@ -1,0 +1,205 @@
+"""Speculative decoding: acceptance rule, rollback math, engine parity.
+
+The host-side pieces (``repro.serve.spec``) are pure functions over numpy
+arrays and ints, so most of this file runs device-free: propose/verify/
+accept-prefix outcomes (0, partial, all-k accepted; the bonus token), the
+rewind arithmetic the scheduler and the device cache both apply, the
+draft-lag bookkeeping, and the stats the metrics report. The final tests
+spin up a real (smoke-sized) engine pair and hold the end-to-end
+invariants: token-for-token parity with the non-speculative engine,
+non-zero acceptance, and a plan-warm steady state.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro import configs as C
+from repro import models
+from repro.core.context import use_context
+from repro.core.plancache import PlanCache
+from repro.launch.mesh import make_local_mesh
+from repro.serve import (BlockPool, Request, ServeEngine, SlotScheduler,
+                         SpecStats, accept_prefix, draft_sync,
+                         synthetic_trace, verify_rewind)
+
+
+# ------------------------------------------------------ acceptance rule
+def test_accept_prefix_all_accepted_appends_bonus():
+    committed, n = accept_prefix([3, 1, 4], np.array([3, 1, 4, 9]))
+    assert n == 3
+    assert committed == [3, 1, 4, 9]        # k proposals + the bonus token
+
+
+def test_accept_prefix_zero_accepted_still_commits_one():
+    committed, n = accept_prefix([5, 6, 7], np.array([1, 2, 3, 4]))
+    assert n == 0
+    assert committed == [1]                 # the target's own choice
+
+
+def test_accept_prefix_partial_commits_through_first_mismatch():
+    committed, n = accept_prefix([5, 6, 7], np.array([5, 6, 9, 8]))
+    assert n == 2
+    assert committed == [5, 6, 9]           # g_2 replaces the bad proposal
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_accept_prefix_always_commits_n_accepted_plus_one(k):
+    rng = np.random.default_rng(k)
+    for _ in range(50):
+        proposed = rng.integers(0, 5, size=k).tolist()
+        greedy = rng.integers(0, 5, size=k + 1)
+        committed, n = accept_prefix(proposed, greedy)
+        assert len(committed) == n + 1
+        assert 0 <= n <= k
+        assert committed[:n] == proposed[:n]
+        assert committed[n] == greedy[n]    # last commit is target's argmax
+
+
+# ------------------------------------------------------- rollback math
+def test_verify_rewind_complements_acceptance():
+    # verify writes k+1 keys; j accepted + the bonus stay, k-j roll back
+    assert verify_rewind(4, 0) == 4
+    assert verify_rewind(4, 2) == 2
+    assert verify_rewind(4, 4) == 0         # full accept: nothing to undo
+    with pytest.raises(ValueError):
+        verify_rewind(4, 5)
+    with pytest.raises(ValueError):
+        verify_rewind(4, -1)
+
+
+def test_draft_sync_tracks_committed_prefix_and_lag():
+    # partial accept: the draft ingested every committed token during the
+    # chain, minus the still-unfed last commit -> lag 0
+    length, lag = draft_sync(10, 2, 4)
+    assert (length, lag) == (9, False)
+    # full accept: the bonus token was never proposed, so the draft is one
+    # token further behind and the next propose starts with a catch-up
+    length, lag = draft_sync(10, 4, 4)
+    assert (length, lag) == (8, True)
+
+
+def test_scheduler_rewind_arithmetic_converges_to_derived():
+    """advance_written(k+1) before the commits, rewind(k-j) after: the
+    tracked KV length must land exactly on the derived count (prompt +
+    generated), whatever j was."""
+    k = 4
+    for j in range(k + 1):
+        s = SlotScheduler(1, max_len=64, spec=True,
+                          pool=BlockPool(num_blocks=9, block_size=8))
+        s.submit(Request(prompt=np.arange(5, dtype=np.int32),
+                         max_new_tokens=32))
+        st = s.admit_next()
+        s.prefill_advance(st.slot, 5)
+        st.tokens.append(7)                  # sampled off prefill logits
+        s.advance_written(st.slot, k + 1)    # verify wrote k+1 keys
+        st.tokens.extend(range(j + 1))       # the round's commits
+        s.rewind(st.slot, verify_rewind(k, j))
+        assert st.live_kv_tokens == 5 + len(st.tokens)
+
+
+# ---------------------------------------------------------------- stats
+def test_spec_stats_aggregation_and_dict():
+    stats = SpecStats(spec_k=4)
+    stats.record_round(4, 4, 5)             # full accept + bonus
+    stats.record_round(4, 1, 2)             # partial
+    stats.record_round(4, 0, 1)             # all rejected
+    d = stats.to_dict()
+    assert d["enabled"] is True and d["spec_k"] == 4
+    assert d["rounds"] == 3
+    assert d["proposed_tokens"] == 12 and d["accepted_tokens"] == 5
+    assert d["committed_tokens"] == 8 and d["bonus_tokens"] == 3
+    assert d["acceptance_rate"] == pytest.approx(5 / 12)
+    assert d["mean_accepted_len"] == pytest.approx(5 / 3)
+    assert d["mean_committed_per_round"] == pytest.approx(8 / 3)
+
+
+# -------------------------------------------------- submit-time gating
+def test_request_validate_rejects_sampling_under_spec():
+    greedy = Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=4)
+    greedy.validate(spec=True)               # fine: greedy by default
+    hot = Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=4,
+                  temperature=0.7)
+    hot.validate()                           # fine without speculation
+    with pytest.raises(ValueError, match="speculative"):
+        hot.validate(spec=True)
+    nucleus = Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=4,
+                      top_p=0.9)
+    with pytest.raises(ValueError, match="speculative"):
+        nucleus.validate(spec=True)
+
+
+def test_spec_scheduler_refuses_sampled_request_at_submit():
+    s = SlotScheduler(1, max_len=32, spec=True)
+    with pytest.raises(ValueError, match="speculative"):
+        s.submit(Request(prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=4, temperature=0.5))
+
+
+# ------------------------------------------------------ engine-level e2e
+@pytest.fixture(scope="module")
+def spec_setup():
+    cfg = C.smoke(C.get_config("qwen1.5-4b"))
+    mesh = make_local_mesh()
+    params = models.init(jax.random.PRNGKey(3), cfg)
+    return cfg, mesh, params
+
+
+def _spec_common(clock=None):
+    return dict(num_slots=3, max_len=48, prompt_pad=8, kv_block_size=8,
+                prefill_chunk=8, clock=clock)
+
+
+def _spec_trace(cfg, n=5):
+    return synthetic_trace(n, vocab_size=cfg.vocab_size,
+                           prompt_lens=[4, 6, 8], max_new_tokens=[6, 9, 4],
+                           seed=11)
+
+
+def test_spec_engine_token_parity_and_steady_state(spec_setup):
+    """Draft == target: committed tokens are the target's own greedy
+    choices, so the spec engine must reproduce the plain engine's output
+    token-for-token, accept a healthy fraction of proposals, and replay
+    only warmed plan signatures (zero lazy solves with speculation on)."""
+    cfg, mesh, params = spec_setup
+    with use_context(plan_cache=PlanCache(path=None)):
+        base = ServeEngine(cfg, mesh, params, **_spec_common())
+        base.plan_warmup()
+        base.run(_spec_trace(cfg))
+        expect = {st.request.prompt.tobytes(): st.tokens
+                  for st in base.finished}
+
+        eng = ServeEngine(cfg, mesh, params, spec_draft_cfg=cfg,
+                          spec_draft_params=params, spec_k=3,
+                          **_spec_common())
+        eng.plan_warmup()
+        m = eng.run(_spec_trace(cfg))
+        got = {st.request.prompt.tobytes(): st.tokens
+               for st in eng.finished}
+    assert sorted(got) == sorted(expect)
+    for key in expect:
+        assert got[key] == expect[key]
+    sp = m.speculation
+    assert sp["enabled"] and sp["spec_k"] == 3
+    assert sp["acceptance_rate"] > 0.5       # identical draft: near-perfect
+    # every generated token is either a round's commit or a request's
+    # first token (sampled from prefill logits, before any speculation)
+    assert sp["committed_tokens"] == (
+        sum(len(t) for t in got.values()) - len(got))
+    assert m.plan_cache["steady_state"]
+    assert m.plan_cache["lazy_solves"] == 0
+
+
+def test_spec_engine_rejects_incompatible_configs(spec_setup):
+    cfg, mesh, params = spec_setup
+    with use_context(plan_cache=PlanCache(path=None)):
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine(cfg, mesh, params, num_slots=2, max_len=32,
+                        prompt_pad=8, spec_draft_cfg=cfg,
+                        spec_draft_params=params)
+        with pytest.raises(ValueError, match="draft"):
+            ServeEngine(cfg, mesh, params, num_slots=2, max_len=32,
+                        prompt_pad=8, kv_block_size=8, spec_draft_cfg=cfg)
+        with pytest.raises(ValueError, match="greedy|temperature"):
+            ServeEngine(cfg, mesh, params, num_slots=2, max_len=32,
+                        prompt_pad=8, kv_block_size=8, spec_draft_cfg=cfg,
+                        spec_draft_params=params, temperature=0.8)
