@@ -1,0 +1,60 @@
+"""Provenance stamp for benchmark result JSON.
+
+Every benchmark artifact answers "which code, which machine, which
+backend, when" without archaeology: :func:`stamp` returns a small dict
+the harness and standalone benchmarks embed verbatim. Keys:
+
+* ``git_sha``    — ``git rev-parse HEAD`` (+ ``-dirty`` when the tree has
+                   uncommitted changes); ``None`` outside a work tree.
+* ``hw``         — active hardware generation name (perf-model target).
+* ``backend``    — active matmul backend (xla / pallas / reference).
+* ``timestamp``  — UTC ISO-8601 at stamp time.
+"""
+from __future__ import annotations
+
+import datetime
+import os
+import subprocess
+from typing import Any
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_sha() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        if out.returncode != 0:
+            return None
+        sha = out.stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=_REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        if dirty.returncode == 0 and dirty.stdout.strip():
+            sha += "-dirty"
+        return sha
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+
+
+def stamp(hw: str | None = None, backend: str | None = None,
+          ) -> dict[str, Any]:
+    """Build the provenance dict. ``hw``/``backend`` default to the
+    active :func:`repro.core.context.current_context` when importable."""
+    if hw is None or backend is None:
+        try:
+            from repro.core.context import current_context
+            ctx = current_context()
+            hw = hw if hw is not None else ctx.hw.name
+            backend = (backend if backend is not None
+                       else ctx.matmul_backend)
+        except Exception:
+            pass
+    return {
+        "git_sha": _git_sha(),
+        "hw": hw,
+        "backend": backend,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }

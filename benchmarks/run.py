@@ -7,8 +7,10 @@ measured wall-clock where the module measures one.
 
 ``--json BENCH_<tag>.json`` additionally writes a machine-readable result
 file (per row: name, us_per_call, modeled TOPS where the row reports one,
-raw derived string, plus the hw generation) so the perf trajectory is
-trackable across PRs.
+raw derived string, plus the hw generation) with a ``provenance`` stamp
+({git_sha, hw, backend, timestamp} — benchmarks/provenance.py) so the
+perf trajectory is trackable across PRs. ``--list`` prints the available
+module keys and exits.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,fig6] \
       [--hw tpu_v6e] [--json BENCH_table1.json]
@@ -33,6 +35,8 @@ def _emitter(rows):
 
 
 def _json_payload(rows, hw_name: str) -> dict:
+    from benchmarks import provenance
+
     results = []
     for name, us, derived in rows:
         m = _TOPS_RE.search(derived)
@@ -43,7 +47,8 @@ def _json_payload(rows, hw_name: str) -> dict:
             "derived": derived,
             "hw": hw_name,
         })
-    return {"hw": hw_name, "results": results}
+    return {"hw": hw_name, "provenance": provenance.stamp(hw=hw_name),
+            "results": results}
 
 
 def main() -> None:
@@ -54,6 +59,8 @@ def main() -> None:
                     help="hardware generation (default: context/REPRO_HW)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as machine-readable JSON")
+    ap.add_argument("--list", action="store_true",
+                    help="print available module keys and exit")
     args = ap.parse_args()
 
     from repro.core.context import use_context
@@ -76,6 +83,12 @@ def main() -> None:
         "roofline": [roofline_cells.run],
         "serve": [serve_engine.run],
     }
+    if args.list:
+        for key, fns in modules.items():
+            mod = sys.modules[fns[0].__module__]
+            doc = (mod.__doc__ or "").strip().splitlines()
+            print(f"{key:10s} {doc[0] if doc else ''}")
+        return
     only = set(args.only.split(",")) if args.only else set(modules)
     rows = []
     emit = _emitter(rows)

@@ -53,10 +53,16 @@ from repro import configs as C
 from repro import models
 from repro.core.context import use_context
 from repro.launch.mesh import make_local_mesh
+from repro.obs.trace import Tracer
 from repro.quant import prequant
 from repro.serve import (ServeEngine, SimClock, bursty_trace,
                          shared_prefix_trace, synthetic_trace)
 from repro.train.servestep import make_serve_step
+
+try:
+    from benchmarks import provenance
+except ImportError:          # run standalone: benchmarks/ is sys.path[0]
+    import provenance
 
 # Big enough that a decode step's GEMMs dominate dispatch overhead on CPU
 # (per-step time scales ~linearly in batch), small enough for CI. Budgets
@@ -314,27 +320,40 @@ def _spec_models():
     return tcfg, tparams, dcfg, dparams, daxes
 
 
+def _rel_err(span_s: float, stat_s: float) -> float:
+    return abs(span_s - stat_s) / stat_s if stat_s > 0 else 0.0
+
+
 def run_spec_pair(mesh) -> dict:
     """The decode-heavy trace through the paged engine, speculation off
     then on. Both runs serve the same target weights, so greedy outputs
     must match token-for-token (every committed token is the target's own
     argmax — the draft only decides how many commit per round); the spec
     run must clear >= 1.5x aggregate tokens/sec and stay plan-warm (draft
-    admit/propose and the (slots, k+1) verify are in the warm-up set)."""
+    admit/propose and the (slots, k+1) verify are in the warm-up set).
+
+    Both engines carry a flight-recorder tracer (identical overhead both
+    sides of the speedup ratio); the spec engine's spec-draft/spec-verify
+    span totals must reconcile with SpecStats draft_s/verify_s within 1%
+    — same perf_counter stamps feed both, so drift means double-counting."""
     tcfg, tparams, dcfg, dparams, daxes = _spec_models()
     common = dict(num_slots=NUM_SLOTS, max_len=SPEC_MAX_LEN,
                   prompt_pad=PROMPT_PAD, kv_block_size=KV_BLOCK,
                   prefill_chunk=SPEC_CHUNK)
-    base = ServeEngine(tcfg, mesh, tparams, **common)
+    base = ServeEngine(tcfg, mesh, tparams, **common, tracer=Tracer())
     warm = base.plan_warmup()
     base_out = _engine_result(base, tcfg, warm, trace_fn=_spec_trace)
-    spec = ServeEngine(tcfg, mesh, tparams, **common,
+    spec_tr = Tracer()
+    spec = ServeEngine(tcfg, mesh, tparams, **common, tracer=spec_tr,
                        spec_draft_cfg=dcfg, spec_draft_params=dparams,
                        spec_k=SPEC_K, spec_draft_param_axes=daxes,
                        spec_draft_quant="int8")
     warm_sp = spec.plan_warmup()
     spec_out = _engine_result(spec, tcfg, warm_sp, trace_fn=_spec_trace)
     sp = spec_out["metrics"]["speculation"]
+    phases = spec_tr.phase_summary()["phases"]
+    draft_span = phases.get("spec-draft", {}).get("total_s", 0.0)
+    verify_span = phases.get("spec-verify", {}).get("total_s", 0.0)
     return {
         "base": base_out,
         "spec": spec_out,
@@ -344,6 +363,14 @@ def run_spec_pair(mesh) -> dict:
         "token_match": (spec_out["tokens_by_request"]
                         == base_out["tokens_by_request"]),
         "acceptance_rate": sp["acceptance_rate"],
+        "trace_reconcile": {
+            "draft_span_s": draft_span,
+            "verify_span_s": verify_span,
+            "draft_s": sp["draft_s"],
+            "verify_s": sp["verify_s"],
+            "draft_rel_err": _rel_err(draft_span, sp["draft_s"]),
+            "verify_rel_err": _rel_err(verify_span, sp["verify_s"]),
+        },
         "spec_k": SPEC_K,
         "target_layers": SPEC_LAYERS,
         "requests": SPEC_N,
@@ -356,23 +383,33 @@ def _slo_trace(cfg):
                         classes=SLO_CLASSES, seed=0)
 
 
-def run_slo_pair(cfg, mesh, params) -> dict:
+def run_slo_pair(cfg, mesh, params, trace_path: str | None = None) -> dict:
     """The bursty mixed-priority trace under FIFO, then EDF — identical
     engines otherwise (paged + prefix cache, SimClock). EDF must admit
     interactive traffic ahead of (and by preempting) background decodes:
     high-priority p99 TTFT drops, while useful tokens are identical and
     the tick count stays within 5% (preempt/resume overhead is bounded by
-    the trie handing the victim its written blocks back)."""
+    the trie handing the victim its written blocks back).
+
+    With ``trace_path``, the EDF run carries a flight recorder and its
+    Chrome trace JSON lands there: the canonical preemption timeline —
+    per-slot phase tracks plus per-request async spans whose active
+    sub-spans show the preempt/resume gaps."""
     common = dict(num_slots=SLO_SLOTS, max_len=SLO_MAX_LEN,
                   prompt_pad=SLO_PROMPT_PAD, kv_block_size=KV_BLOCK,
                   num_kv_blocks=SLO_KV_BLOCKS, prefill_chunk=SLO_CHUNK,
                   prefix_cache=True)
     out = {}
     for policy in ("fifo", "edf"):
+        tracer = Tracer() if trace_path and policy == "edf" else None
         engine = ServeEngine(cfg, mesh, params, sched_policy=policy,
-                             clock=SimClock(SLO_DT), **common)
+                             clock=SimClock(SLO_DT), tracer=tracer,
+                             **common)
         warm = engine.plan_warmup()
         r = _engine_result(engine, cfg, warm, trace_fn=_slo_trace)
+        if tracer is not None:
+            tracer.save(trace_path)
+            r["trace_path"] = trace_path
         d = r["metrics"]
         r["slo"] = d["slo"]
         r["preemptions"] = d["aggregate"]["preemptions"]
@@ -396,7 +433,8 @@ def run_slo_pair(cfg, mesh, params) -> dict:
     }
 
 
-def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
+def main(json_path: str | None = None, emit=print, strict: bool = True,
+         trace_path: str | None = None) -> dict:
     cfg = bench_config()
     mesh = make_local_mesh()
     params = models.init(jax.random.PRNGKey(0), cfg)
@@ -405,8 +443,9 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
         engine = run_engine(cfg, mesh, params)
         paged = run_paged(cfg, mesh, params)
         prefix = run_prefix_pair(cfg, mesh, params)
-        slo = run_slo_pair(cfg, mesh, params)
+        slo = run_slo_pair(cfg, mesh, params, trace_path=trace_path)
         spec = run_spec_pair(mesh)
+        prov = provenance.stamp()
     speedup = engine["tokens_per_sec"] / static["tokens_per_sec"]
     token_match = (paged["tokens_by_request"] == engine["tokens_by_request"])
     mem_ratio = paged["block_pool"]["memory_ratio"]
@@ -446,7 +485,8 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
     for r in (engine, paged, prefix["off"], prefix["on"],
               slo["fifo"], slo["edf"], spec["base"], spec["spec"]):
         r.pop("tokens_by_request")  # parity input, noise in the JSON
-    result = {"static": static, "engine": engine, "paged": paged,
+    result = {"provenance": prov,
+              "static": static, "engine": engine, "paged": paged,
               "prefix": prefix, "slo": slo, "spec": spec,
               "spec_speedup": spd,
               "spec_token_match": spec["token_match"],
@@ -519,6 +559,12 @@ def main(json_path: str | None = None, emit=print, strict: bool = True) -> dict:
             raise SystemExit(
                 f"speculation speedup {spd:.2f}x below the 1.5x bar "
                 f"(acceptance {spec['acceptance_rate']:.2f}, k={SPEC_K})")
+        rec = spec["trace_reconcile"]
+        if max(rec["draft_rel_err"], rec["verify_rel_err"]) > 0.01:
+            raise SystemExit(
+                f"spec phase spans diverged from SpecStats: draft "
+                f"{rec['draft_rel_err']:.1%}, verify "
+                f"{rec['verify_rel_err']:.1%} (bound: 1%)")
     return result
 
 
@@ -537,5 +583,8 @@ def _emit_row(emit, line: str) -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the SLO pair's EDF run as Chrome "
+                         "trace-event JSON (docs/observability.md)")
     args = ap.parse_args()
-    main(json_path=args.json)
+    main(json_path=args.json, trace_path=args.trace_out)

@@ -89,12 +89,32 @@ class PlanCache:
         self._warming = 0
         # distinct keys consulted during the current/most recent warm-up
         self.warm_keys: set[PlanKey] = set()
+        # observers of solver activity: fn(event, key) with event in
+        # {"miss", "warm_solve", "lazy_solve"}. The serve engine hangs a
+        # tracer listener here so a lazy solve shows up ON the timeline
+        # as the cause of a slow tick, not just in end-of-run counters.
+        self._listeners: list = []
+
+    # --------------------------------------------------------- listeners
+    def add_listener(self, fn) -> None:
+        """Register ``fn(event, key)`` for miss/warm_solve/lazy_solve."""
+        self._listeners.append(fn)
+
+    def remove_listener(self, fn) -> None:
+        with contextlib.suppress(ValueError):
+            self._listeners.remove(fn)
+
+    def _notify(self, event: str, key: PlanKey) -> None:
+        for fn in self._listeners:
+            fn(event, key)
 
     # ------------------------------------------------------------ lookup
     def get(self, key: PlanKey) -> GemmPlan | None:
         plan = self.entries.get(key)
         if plan is None:
             self.stats.misses += 1
+            if self._listeners:
+                self._notify("miss", key)
         else:
             self.stats.hits += 1
         if self._warming:
@@ -107,6 +127,9 @@ class PlanCache:
             self.stats.warm_solves += 1
         else:
             self.stats.lazy_solves += 1
+        if self._listeners:
+            self._notify("warm_solve" if self._warming else "lazy_solve",
+                         key)
         return plan
 
     def __len__(self) -> int:

@@ -153,6 +153,21 @@ def add_serve_engine_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
         "--metrics-json", default=None, metavar="PATH",
         help="write the engine's serve metrics JSON here")
     g.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="flight recorder: write a Chrome trace-event JSON of the "
+             "run (phase spans + per-request async spans; load in "
+             "Perfetto or chrome://tracing — docs/observability.md). "
+             "Also adds the `timing` section to the metrics JSON")
+    g.add_argument(
+        "--trace-ring-events", type=int, default=65536, metavar="N",
+        help="tracer ring-buffer capacity in events; oldest events drop "
+             "past it (default 65536 ~ 16k ticks of phase spans)")
+    g.add_argument(
+        "--metrics-interval-ticks", type=int, default=None, metavar="N",
+        help="snapshot the counter registry every N engine ticks and "
+             "write its Prometheus text exposition next to "
+             "--metrics-json (default: end-of-run publish only)")
+    g.add_argument(
         "--measure-plans", action="store_true",
         help="refine warm-up plans in place with wall-clock measurement "
              "(core.autotune) and persist the refined plans")

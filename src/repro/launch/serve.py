@@ -131,6 +131,7 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
     (with --prefix-cache: a shared-header trace, so the radix cache has
     prefixes to dedupe; with --bursty-trace: bursts of mixed-priority
     traffic, the shape --sched-policy and --ttft-target-ms exist for)."""
+    from repro.obs.trace import Tracer
     from repro.serve import (ServeEngine, SimClock, bursty_trace,
                              shared_prefix_trace, synthetic_trace)
 
@@ -201,6 +202,8 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
             max_new_tokens=[gen, max(1, gen // 2), max(1, gen // 4)],
             stop_ids=stop, seed=0)
         max_len = plen + gen + 1
+    tracer = (Tracer(ring_events=args.trace_ring_events)
+              if args.trace_out else None)
     engine = ServeEngine(
         cfg, mesh, params, num_slots=args.num_slots,
         max_len=max_len, prompt_pad=prompt_pad, param_axes=param_axes,
@@ -214,6 +217,8 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
         ttft_target_ms=args.ttft_target_ms,
         max_prefill_chunks=args.max_prefill_chunks,
         clock=(SimClock(args.sim_clock) if args.sim_clock else None),
+        tracer=tracer,
+        metrics_interval_ticks=args.metrics_interval_ticks,
         **spec_kwargs)
     if not args.no_warmup:
         t0 = time.perf_counter()
@@ -226,11 +231,17 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
     qtag = f" quant={ctx.quant_mode}" if ctx.quant_mode else ""
     ptag = (f" paged(block={engine.kv_block_size},"
             f"pool={engine.num_kv_blocks})" if engine.paged else "")
+    # rate properties are None when their denominator never moved (e.g.
+    # a SimClock run finishing inside one resolution step)
+    tps = (f"{m.tokens_per_sec:.1f} tok/s" if m.tokens_per_sec is not None
+           else f"{m.tokens_per_tick:.2f} tok/tick")
+    occ = (f"{m.mean_occupancy:.2f}" if m.mean_occupancy is not None
+           else "n/a")
     print(f"[engine]{ptag} arch={cfg.name}{qtag} hw={ctx.hw.name} "
           f"backend={ctx.matmul_backend} slots={args.num_slots}: "
           f"{len(trace)} requests, {m.generated_tokens} tokens in "
-          f"{m.wall_s:.2f}s ({m.tokens_per_sec:.1f} tok/s incl. compile), "
-          f"mean occupancy {m.mean_occupancy:.2f}/{args.num_slots}, "
+          f"{m.wall_s:.2f}s ({tps} incl. compile), "
+          f"mean occupancy {occ}/{args.num_slots}, "
           f"{m.ticks} ticks")
     if engine.paged:
         bp = m.block_pool
@@ -282,9 +293,23 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
     first = engine.finished[0]
     print(f"first finished: id={first.request.request_id} "
           f"reason={first.finish_reason} tokens={first.tokens[:12]} ...")
+    if tracer is not None:
+        obj = tracer.save(args.trace_out)
+        t = m.timing
+        print(f"[trace] {len(obj['traceEvents'])} events "
+              f"({t.get('events_dropped', 0)} dropped) -> {args.trace_out}; "
+              f"host {t.get('host_s', 0.0):.3f}s / device "
+              f"{t.get('device_s', 0.0):.3f}s across "
+              f"{len(t.get('phases', {}))} phases")
     if args.metrics_json:
         m.to_json(args.metrics_json)
         print(f"[engine] metrics written to {args.metrics_json}")
+        if args.metrics_interval_ticks:
+            prom_path = args.metrics_json + ".prom"
+            with open(prom_path, "w") as f:
+                f.write(engine.registry.to_prometheus_text())
+            print(f"[registry] {len(engine.registry.snapshots)} snapshots, "
+                  f"exposition written to {prom_path}")
     # steady state needs no guard here: a warmed engine's run() itself
     # raises PlanCacheColdError on any lazy solve or unseen signature
 

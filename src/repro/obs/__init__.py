@@ -1,0 +1,31 @@
+"""repro.obs — zero-cost-when-off observability for the serving stack.
+
+Two complementary instruments (docs/observability.md):
+
+* ``trace`` — a bounded ring-buffer event tracer recording per-tick
+  **phase spans** (admit, bind, prefill-chunk, spec-draft, spec-verify,
+  decode, sample, expire, reclaim) and per-request **lifecycle events**
+  (submit, admit, chunk, first-token, preempt, resume, rewind, finish),
+  each stamped with both a host ``perf_counter`` time and the engine
+  tick. Exports Chrome trace-event JSON that loads directly in Perfetto
+  or ``chrome://tracing`` — slots as tracks, requests as async spans.
+* ``registry`` — a counter/gauge/histogram registry with Prometheus
+  text exposition and periodic snapshots, onto which the engine's
+  subsystem counters (block pool, prefix cache, plan cache, SpecStats,
+  budget controller) are published.
+
+Both are off by default: the engine holds the ``NULL_TRACER`` singleton
+whose methods are no-ops and never read a clock, so an untraced run is
+bit-identical (output *and* metrics JSON) to a build without this
+package.
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram, Registry,
+                                prom_name)
+from repro.obs.trace import (NULL_TRACER, PHASES, NullTracer, Tracer,
+                             validate_chrome_trace)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "PHASES",
+    "validate_chrome_trace",
+    "Registry", "Counter", "Gauge", "Histogram", "prom_name",
+]

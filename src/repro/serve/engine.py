@@ -53,6 +53,8 @@ import numpy as np
 from repro import models
 from repro.configs.base import ModelConfig
 from repro.core.context import current_context
+from repro.obs.registry import Registry, prom_name
+from repro.obs.trace import NULL_TRACER
 from repro.serve.blockpool import BlockPool
 from repro.serve.metrics import EngineMetrics
 from repro.serve.policy import BudgetController, SchedPolicy, get_policy
@@ -103,6 +105,9 @@ class ServeEngine:
         spec_k: int = 4,
         spec_draft_param_axes=None,
         spec_draft_quant: str | None = None,
+        tracer=None,
+        registry: Registry | None = None,
+        metrics_interval_ticks: int | None = None,
     ):
         self.cfg = cfg
         self.mesh = mesh
@@ -121,6 +126,13 @@ class ServeEngine:
         # deadlines and burst arrivals become deterministic functions of
         # the event sequence
         self._now = clock if clock is not None else time.perf_counter
+        # observability (repro.obs): the tracer keeps its own host clock
+        # and never reads self._now — under SimClock a clock *read*
+        # advances time, so tracing on/off must not change the engine's
+        # read sequence. NULL_TRACER makes every hook a no-op.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.registry = registry if registry is not None else Registry()
+        self.metrics_interval_ticks = metrics_interval_ticks
         self.paged = bool(kv_block_size)
         self.spec = spec_draft_cfg is not None
         self.spec_k = int(spec_k) if self.spec else 0
@@ -225,6 +237,7 @@ class ServeEngine:
         """Fresh scheduler/state/metrics; compiled functions are kept (the
         benchmark times a second run to measure steady state, not XLA)."""
         ctx = current_context()
+        self.tracer.reset()
         # the engine's time base: every stamp (submit, admission, TTFT,
         # deadlines, trace arrival_s) is seconds since this reset, so
         # absolute deadline_s/arrival_s values in a trace mean what they
@@ -234,12 +247,13 @@ class ServeEngine:
             self.state = self._init_fn()
         pool = (BlockPool(self.num_kv_blocks, self.kv_block_size)
                 if self.paged else None)
-        cache = (PrefixCache(pool, max_cached_blocks=self.prefix_cache_blocks)
+        cache = (PrefixCache(pool, max_cached_blocks=self.prefix_cache_blocks,
+                             tracer=self.tracer)
                  if self.prefix_cache_enabled else None)
         self.sched = SlotScheduler(self.num_slots, max_len=self.max_len,
                                    pool=pool, prefix_cache=cache,
                                    policy=self.sched_policy,
-                                   spec=self.spec)
+                                   spec=self.spec, tracer=self.tracer)
         if self.spec:
             with self.mesh:
                 self.draft_state = self._draft_init_fn()
@@ -408,6 +422,8 @@ class ServeEngine:
         st.append(tok, now, tick=self.sched.tick)
         if first_ever:
             self.budget.observe_ttft(now - st.request.submitted_s)
+            self.tracer.request_event("first-token", st.request.request_id,
+                                      slot=st.slot)
         self._next_tok[st.slot] = tok
         reason = ("length" if len(st.tokens) >= self._budget(st)
                   else st.should_stop())
@@ -427,11 +443,13 @@ class ServeEngine:
             req = st.request
             prompt = np.full((1, self.prompt_pad), self.pad_id, np.int32)
             prompt[0, : req.prompt_len] = req.prompt
-            logits, self.state = self.art.admit_fn(
-                self.params, self.state, jnp.asarray(prompt),
-                jnp.asarray(st.slot, jnp.int32),
-                jnp.asarray(req.prompt_len, jnp.int32))
-            self._first_token(st, np.asarray(logits), self._rel_now())
+            with self.tracer.phase("admit", slot=st.slot):
+                logits, self.state = self.art.admit_fn(
+                    self.params, self.state, jnp.asarray(prompt),
+                    jnp.asarray(st.slot, jnp.int32),
+                    jnp.asarray(req.prompt_len, jnp.int32))
+                np_logits = np.asarray(logits)
+            self._first_token(st, np_logits, self._rel_now())
 
     def _bind_admissions(self, now: float) -> int:
         """Paged path: bind queue heads to free lanes + allocate their KV
@@ -456,10 +474,11 @@ class ServeEngine:
         req = st.request
         prompt = np.full((1, self.prompt_pad), self.pad_id, np.int32)
         prompt[0, : req.prompt_len] = req.prompt
-        _, self.draft_state = self.spec_art.draft_admit_fn(
-            self.spec_draft_params, self.draft_state, jnp.asarray(prompt),
-            jnp.asarray(st.slot, jnp.int32),
-            jnp.asarray(req.prompt_len, jnp.int32))
+        with self.tracer.phase("admit", slot=st.slot, draft=True):
+            _, self.draft_state = self.spec_art.draft_admit_fn(
+                self.spec_draft_params, self.draft_state, jnp.asarray(prompt),
+                jnp.asarray(st.slot, jnp.int32),
+                jnp.asarray(req.prompt_len, jnp.int32))
         self._lag[st.slot] = False
 
     def _chunk_shape(self, remaining: int) -> tuple[int, int]:
@@ -488,13 +507,17 @@ class ServeEngine:
         chunk[0, :n] = seq[start: start + n]
         blocks = np.zeros((self.art.max_blocks,), np.int32)
         blocks[: len(st.blocks)] = st.blocks
-        logits, self.state = self.art.prefill_fn(
-            self.params, self.state, jnp.asarray(chunk),
-            jnp.asarray(st.slot, jnp.int32),
-            jnp.asarray(start, jnp.int32),
-            jnp.asarray(n, jnp.int32),
-            jnp.asarray(blocks))
+        with self.tracer.phase("prefill-chunk", slot=st.slot, n=n,
+                               bucket=bucket):
+            logits, self.state = self.art.prefill_fn(
+                self.params, self.state, jnp.asarray(chunk),
+                jnp.asarray(st.slot, jnp.int32),
+                jnp.asarray(start, jnp.int32),
+                jnp.asarray(n, jnp.int32),
+                jnp.asarray(blocks))
         self.sched.prefill_advance(st.slot, n)
+        self.tracer.request_event("chunk", st.request.request_id,
+                                  slot=st.slot, n=n, done=st.prefill_done)
         if st.prefilling:
             return 0
         self._first_token(st, np.asarray(logits), self._rel_now())
@@ -534,55 +557,64 @@ class ServeEngine:
         t2 = time.perf_counter()
         self.spec_stats.draft_s += t1 - t0
         self.spec_stats.verify_s += t2 - t1
+        if self.tracer.enabled:
+            # externally-timed spans carrying the SAME perf_counter stamps
+            # that feed SpecStats — summed spans reconcile exactly with
+            # draft_s/verify_s
+            self.tracer.phase_span("spec-draft", t0, t1)
+            self.tracer.phase_span("spec-verify", t1, t2)
         now = self._rel_now()
-        # post-verify device lengths: every active lane advanced by k+1;
-        # the acceptance walk decides how far each rolls back
-        tgt_len = np.asarray(self.state["kv"].length).copy()
-        drf_len = np.asarray(self.draft_state["kv"].length).copy()
-        produced = 0
-        for slot in np.flatnonzero(mask):
-            st = self.sched.slots[slot]
-            self.sched.advance_written(slot, k + 1)
-            greedy = spec_lib.greedy_rows(np_logits[slot],
-                                          self.cfg.vocab_size)
-            committed, n_accepted = spec_lib.accept_prefix(
-                np_props[slot], greedy)
-            finished = False
-            n_committed = 0
-            for i, tok in enumerate(committed):
-                st.append(tok, now, tick=self.sched.tick)
-                self._next_tok[slot] = tok
-                n_committed += 1
-                produced += 1
-                reason = ("length" if len(st.tokens) >= self._budget(st)
-                          else st.should_stop())
-                if reason:
-                    # committed[0..n_accepted-1] are accepted proposals,
-                    # committed[n_accepted] the bonus: a finish at index i
-                    # used min(i + 1, n_accepted) proposals
-                    n_accepted = min(n_accepted, i + 1)
-                    self._finish(st, reason, now)
-                    finished = True
-                    break
-            self.spec_stats.record_round(k, n_accepted, n_committed)
-            if finished:
-                continue
-            # target KV must cover all committed tokens except the newest
-            rewind = spec_lib.verify_rewind(k, n_accepted)
-            self.sched.rewind(slot, rewind)
-            tgt_len[slot] -= rewind
-            committed_len = st.request.prompt_len + len(st.tokens)
-            drf_len[slot], lag = spec_lib.draft_sync(
-                committed_len, n_accepted, k)
-            self._lag[slot] = lag
-            if lag:
-                self._catch_tok[slot] = st.tokens[-2]
-        kv = self.state["kv"]
-        self.state["kv"] = kv._replace(
-            length=jnp.asarray(tgt_len, jnp.int32))
-        dkv = self.draft_state["kv"]
-        self.draft_state["kv"] = dkv._replace(
-            length=jnp.asarray(drf_len, jnp.int32))
+        with self.tracer.phase("sample", n=int(mask.sum())):
+            # post-verify device lengths: every active lane advanced by
+            # k+1; the acceptance walk decides how far each rolls back
+            tgt_len = np.asarray(self.state["kv"].length).copy()
+            drf_len = np.asarray(self.draft_state["kv"].length).copy()
+            produced = 0
+            for slot in np.flatnonzero(mask):
+                st = self.sched.slots[slot]
+                self.sched.advance_written(slot, k + 1)
+                greedy = spec_lib.greedy_rows(np_logits[slot],
+                                              self.cfg.vocab_size)
+                committed, n_accepted = spec_lib.accept_prefix(
+                    np_props[slot], greedy)
+                finished = False
+                n_committed = 0
+                for i, tok in enumerate(committed):
+                    st.append(tok, now, tick=self.sched.tick)
+                    self._next_tok[slot] = tok
+                    n_committed += 1
+                    produced += 1
+                    reason = ("length" if len(st.tokens) >= self._budget(st)
+                              else st.should_stop())
+                    if reason:
+                        # committed[0..n_accepted-1] are accepted
+                        # proposals, committed[n_accepted] the bonus: a
+                        # finish at index i used min(i + 1, n_accepted)
+                        # proposals
+                        n_accepted = min(n_accepted, i + 1)
+                        self._finish(st, reason, now)
+                        finished = True
+                        break
+                self.spec_stats.record_round(k, n_accepted, n_committed)
+                if finished:
+                    continue
+                # target KV must cover all committed tokens except the
+                # newest
+                rewind = spec_lib.verify_rewind(k, n_accepted)
+                self.sched.rewind(slot, rewind)
+                tgt_len[slot] -= rewind
+                committed_len = st.request.prompt_len + len(st.tokens)
+                drf_len[slot], lag = spec_lib.draft_sync(
+                    committed_len, n_accepted, k)
+                self._lag[slot] = lag
+                if lag:
+                    self._catch_tok[slot] = st.tokens[-2]
+            kv = self.state["kv"]
+            self.state["kv"] = kv._replace(
+                length=jnp.asarray(tgt_len, jnp.int32))
+            dkv = self.draft_state["kv"]
+            self.draft_state["kv"] = dkv._replace(
+                length=jnp.asarray(drf_len, jnp.int32))
         return produced
 
     def tick(self) -> int:
@@ -590,11 +622,15 @@ class ServeEngine:
         ``budget.chunks_per_tick()`` prefill chunks), then one masked
         decode step for the decode-ready lanes. Returns the number of
         tokens generated."""
+        tr = self.tracer
+        tr.set_tick(self.sched.tick)
         now = self._rel_now()
-        for st in self.sched.expire_deadlines(now):
-            self.metrics.record_request(st)
+        with tr.phase("expire"):
+            for st in self.sched.expire_deadlines(now):
+                self.metrics.record_request(st)
         if self.paged:
-            self._bind_admissions(now)
+            with tr.phase("bind"):
+                self._bind_admissions(now)
             produced = 0
             # the budget controller's knob: how much of this tick goes to
             # prefill (TTFT) vs decode (throughput). Same warm chunk
@@ -611,22 +647,24 @@ class ServeEngine:
             produced += self._spec_round(mask)
         elif ready:
             toks = np.where(mask, self._next_tok, self.pad_id)
-            logits, self.state = self.art.decode_fn(
-                self.params, self.state,
-                jnp.asarray(toks[:, None], jnp.int32),
-                jnp.asarray(mask, jnp.int32))
-            np_logits = np.asarray(logits)
+            with tr.phase("decode", n=ready):
+                logits, self.state = self.art.decode_fn(
+                    self.params, self.state,
+                    jnp.asarray(toks[:, None], jnp.int32),
+                    jnp.asarray(mask, jnp.int32))
+                np_logits = np.asarray(logits)
             now = self._rel_now()
-            for slot in np.flatnonzero(mask):
-                st = self.sched.slots[slot]
-                tok = self._sample(np_logits[slot], st)
-                st.append(tok, now, tick=self.sched.tick)
-                self._next_tok[slot] = tok
-                produced += 1
-                reason = ("length" if len(st.tokens) >= self._budget(st)
-                          else st.should_stop())
-                if reason:
-                    self._finish(st, reason, now)
+            with tr.phase("sample", n=ready):
+                for slot in np.flatnonzero(mask):
+                    st = self.sched.slots[slot]
+                    tok = self._sample(np_logits[slot], st)
+                    st.append(tok, now, tick=self.sched.tick)
+                    self._next_tok[slot] = tok
+                    produced += 1
+                    reason = ("length" if len(st.tokens) >= self._budget(st)
+                              else st.should_stop())
+                    if reason:
+                        self._finish(st, reason, now)
         if self.paged:
             self.metrics.record_block_pool(
                 self.sched.pool, self.sched.live_tokens(),
@@ -637,6 +675,10 @@ class ServeEngine:
         # via deferred/prefill metrics
         self.metrics.record_tick(ready, produced, self.sched.pending)
         self.sched.tick += 1
+        if (self.metrics_interval_ticks
+                and self.sched.tick % self.metrics_interval_ticks == 0):
+            self._publish_registry()
+            self.registry.snapshot(tick=self.sched.tick)
         return produced
 
     # ------------------------------------------------------------ driving
@@ -666,13 +708,25 @@ class ServeEngine:
                     self.sched.submit(r, now)
             self.tick()
 
-        if self._warmed:
-            with cache.expect_steady_state("serve-engine loop"):
+        listener = None
+        if self.tracer.enabled:
+            # plan-solve events on the timeline: in steady state none
+            # fire; a "plan-lazy_solve" instant IS the regression
+            tr = self.tracer
+            def listener(event, key):  # noqa: E306
+                tr.instant(f"plan-{event}", key="|".join(map(str, key)))
+            cache.add_listener(listener)
+        try:
+            if self._warmed:
+                with cache.expect_steady_state("serve-engine loop"):
+                    while pending or not self.sched.idle:
+                        step()
+            else:
                 while pending or not self.sched.idle:
                     step()
-        else:
-            while pending or not self.sched.idle:
-                step()
+        finally:
+            if listener is not None:
+                cache.remove_listener(listener)
         self.metrics.wall_s = self._rel_now() - t_start
         self.metrics.record_plan_cache(before, cache.stats.snapshot())
         counters = self.sched.counters()
@@ -690,7 +744,41 @@ class ServeEngine:
             self.metrics.record_speculation(
                 self.spec_stats, draft_arch=self.spec_draft_cfg.name,
                 draft_quant=self.spec_draft_quant)
+        if self.tracer.enabled:
+            self.metrics.timing = self.tracer.phase_summary()
+            for name, durs in self.tracer.phase_durations().items():
+                h = self.registry.histogram(
+                    f"repro_serve_phase_{prom_name(name)}_seconds",
+                    "engine phase span duration (s)")
+                for d in durs:
+                    h.observe(d)
+        self._publish_registry()
+        if self.metrics_interval_ticks:
+            self.registry.snapshot(tick=self.sched.tick)
         return self.metrics
+
+    def _publish_registry(self) -> None:
+        """Mirror the subsystem counters into the registry (gauges named
+        ``repro_serve_*`` / ``repro_plan_cache_*`` — docs/observability.md).
+        The dicts the metrics JSON is built from are the source of truth;
+        the registry is a uniform re-homing, not a second count."""
+        reg = self.registry
+        m = self.metrics
+        reg.ingest("serve", {
+            "ticks": m.ticks,
+            "generated_tokens": m.generated_tokens,
+            "occupancy_sum": m.occupancy_sum,
+            "queue_peak": m.queue_peak,
+        })
+        reg.ingest("serve_sched", self.sched.counters())
+        reg.ingest("serve_budget", self.budget.stats())
+        if self.spec:
+            self.spec_stats.publish(reg)
+        pcs = current_context().plan_cache.stats
+        reg.ingest("plan_cache", {
+            "hits": pcs.hits, "misses": pcs.misses,
+            "warm_solves": pcs.warm_solves, "lazy_solves": pcs.lazy_solves,
+        })
 
     @property
     def finished(self) -> list[RequestState]:

@@ -1,84 +1,25 @@
 """Serving metrics: per-request latency, aggregate throughput, slot
-occupancy, and plan-cache warmth — exportable as JSON.
+occupancy, plan-cache warmth, and (traced runs) phase timing — exportable
+as JSON.
 
-Schema (``EngineMetrics.to_dict``, documented in docs/serving.md):
+The full ``EngineMetrics.to_dict`` schema — every section, key and the
+semantics behind the trickier ones (two TTFT views, eviction causes,
+speculation accounting, hit_rate definition) — lives in
+**docs/observability.md**; ``tests/test_metrics_schema.py`` pins it as a
+golden schema, so schema drift is a reviewed change, not an accident.
 
-```
-{
-  "engine": {num_slots, max_len, prompt_pad, arch, hw, backend, quant,
-             paged, temperature, top_p,
-             [kv_block_size, num_kv_blocks, prefill_chunk, chunk_buckets,
-              prefix_cache, prefix_cache_blocks]},
-  "aggregate": {wall_s, ticks, generated_tokens, tokens_per_sec,
-                mean_occupancy, admissions, deferred_admissions,
-                evictions{finished{reason: n}, preempted, deadline_missed},
-                preemptions, resumes, deadline_missed, policy, queue_peak},
-  "requests": [{request_id, priority, deadline_s, prompt_len,
-                cached_tokens, tokens, queue_s, ttft_s, ttft_ticks,
-                total_s, per_token_s, preemptions, finish_reason,
-                arrival_tick, admitted_tick, finished_tick}],
-  "slo": {"<priority>": {n, finished, deadline_missed, miss_rate,
-                         preemptions, p50_ttft_s, p99_ttft_s,
-                         p50_ttft_ticks, p99_ttft_ticks}},
-  "budget": {target_ttft_s, min_chunks, max_chunks, final_chunks,
-             raises, drops, observations, ema_ttft_s},
-  "block_pool": {num_blocks, block_size, peak_in_use, peak_utilization,
-                 peak_fragmentation_tokens, pool_tokens, contiguous_tokens,
-                 memory_ratio, allocs, frees, failed_allocs, increfs,
-                 cached_idle_blocks, reclaimed_blocks},   # paged only
-  "prefix_cache": {lookups, lookup_tokens, hits, hit_tokens, hit_rate,
-                   inserted_blocks, duplicate_blocks, cached_blocks,
-                   cached_idle_blocks, reclaimed_blocks, trimmed_blocks,
-                   max_cached_blocks},   # --prefix-cache only
-  "speculation": {enabled, spec_k, draft_arch, draft_quant, rounds,
-                  proposed_tokens, accepted_tokens, bonus_tokens,
-                  committed_tokens, acceptance_rate, mean_accepted_len,
-                  mean_committed_per_round, draft_s, verify_s},
-                  # --spec-draft-config only ({"enabled": false} otherwise)
-  "plan_cache": {hits, misses, lazy_solves, warm_solves, steady_state}
-}
-```
+Conventions worth restating at the source:
 
-``speculation``: ``proposed_tokens`` counts draft proposals fed to the
-verify pass; ``accepted_tokens`` those the target's greedy walk kept;
-``bonus_tokens`` the target-argmax commits on top (one per round unless
-a stop/length finish truncates it); ``acceptance_rate`` is accepted /
-proposed and ``mean_accepted_len`` accepted / rounds — together with
-``mean_committed_per_round`` (committed / rounds, up to spec_k + 1) the
-speedup accounting for the benchmark's >= 1.5x gate. ``draft_s`` /
-``verify_s`` split speculative tick wall time between the propose and
-verify dispatches (host ``perf_counter``, not the sim clock).
-
-``prefix_cache.hit_rate`` is hit_tokens / lookup_tokens — the fraction of
-all admitted prompt tokens whose prefill GEMMs the radix cache skipped
-(docs/serving.md; the shared-prompt benchmark asserts >= 0.5 on its
-trace); deferred-admission retries are un-counted, so the rate reflects
-admissions only. ``reclaimed_blocks`` counts cached-idle blocks
-surrendered to the allocator under pressure (LRU leaves first);
-``trimmed_blocks`` counts --prefix-cache-blocks cap evictions — routine,
-not a pressure signal. ``block_pool.reclaimed_blocks`` is their sum
-(every block the cache returned to the free list).
-
-``memory_ratio`` is the paged pool's whole-cache token capacity over the
-contiguous layout's ``num_slots * max_len`` — the footprint the block-table
-refactor exists to shrink (the benchmark asserts <= 0.5x).
-
-Two TTFT views coexist: per-request ``ttft_s`` is admission-to-first-token
-(the first token falls out of the admission prefill itself) with queueing
-delay separately as ``queue_s`` (submit to admission); the ``slo`` section
-uses the *user-visible* latency — submit to first token, ``queue_s +
-ttft_s``, and its deterministic twin ``ttft_ticks`` (first_token_tick -
-arrival_tick), which is what the FIFO-vs-EDF benchmark compares (p99 in
-ticks is exact under SimClock; seconds wobble with the host). ``slo`` is
-keyed by priority class and reports the deadline-miss rate per class —
-misses include requests cancelled before ever being admitted.
-
-``evictions`` separates causes: ``finished`` (terminal, by finish
-reason), ``preempted`` (requeued — the lane was taken by a higher-ranked
-request and the victim resumes later) and ``deadline_missed`` (terminal).
-``preemptions >= resumes`` always; they differ only for requests still
-paused when the run drained (impossible in ``run()``, which runs to
-idle).
+* Ratios whose denominator never moved are ``None``, not ``0.0``: a
+  SimClock run can legitimately finish inside one clock resolution step
+  (``wall_s == 0``), and "throughput unknown" must not export as
+  "throughput zero". Every wall-time rate has a deterministic tick-based
+  twin (``tokens_per_tick``, ``ttft_ticks``, ``p99_ttft_ticks``) that is
+  exact under any clock.
+* The ``timing`` section exists only on traced runs (an attached
+  ``repro.obs.trace.Tracer``): per-phase count/total/mean/p50/p99
+  seconds plus the host-vs-device split. Untraced metrics JSON is
+  bit-identical to pre-observability output.
 """
 from __future__ import annotations
 
@@ -114,6 +55,7 @@ class EngineMetrics:
     speculation: dict[str, Any] = dataclasses.field(
         default_factory=lambda: {"enabled": False})
     plan_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
+    timing: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------ record
     def record_tick(self, occupied: int, new_tokens: int,
@@ -232,21 +174,31 @@ class EngineMetrics:
         return out
 
     @property
-    def tokens_per_sec(self) -> float:
-        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
+    def tokens_per_sec(self) -> float | None:
+        """Wall-clock throughput, or None when wall_s never advanced (a
+        SimClock run can finish inside one resolution step — "unknown",
+        not zero). ``tokens_per_tick`` is the deterministic twin."""
+        return (self.generated_tokens / self.wall_s if self.wall_s > 0
+                else None)
 
     @property
-    def mean_occupancy(self) -> float:
-        return self.occupancy_sum / self.ticks if self.ticks else 0.0
+    def tokens_per_tick(self) -> float | None:
+        """Throughput per engine tick — exact under any clock."""
+        return self.generated_tokens / self.ticks if self.ticks else None
+
+    @property
+    def mean_occupancy(self) -> float | None:
+        return self.occupancy_sum / self.ticks if self.ticks else None
 
     def to_dict(self) -> dict[str, Any]:
-        return {
+        out = {
             "engine": dict(self.engine),
             "aggregate": {
                 "wall_s": self.wall_s,
                 "ticks": self.ticks,
                 "generated_tokens": self.generated_tokens,
                 "tokens_per_sec": self.tokens_per_sec,
+                "tokens_per_tick": self.tokens_per_tick,
                 "mean_occupancy": self.mean_occupancy,
                 "admissions": self.admissions,
                 "deferred_admissions": self.deferred_admissions,
@@ -265,6 +217,11 @@ class EngineMetrics:
             "speculation": dict(self.speculation),
             "plan_cache": dict(self.plan_cache),
         }
+        if self.timing:
+            # traced runs only — untraced JSON stays bit-identical to
+            # the pre-observability schema
+            out["timing"] = dict(self.timing)
+        return out
 
     def to_json(self, path: str | None = None, **kw) -> str:
         s = json.dumps(self.to_dict(), indent=2, **kw)

@@ -51,6 +51,7 @@ from typing import Hashable, Iterator
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.serve.blockpool import BlockPool
 
 # private namespace key for salt=None: a sentinel, not a value a caller
@@ -83,12 +84,16 @@ class PrefixCache:
     """
 
     def __init__(self, pool: BlockPool, *,
-                 max_cached_blocks: int | None = None):
+                 max_cached_blocks: int | None = None, tracer=None):
         if max_cached_blocks is not None and max_cached_blocks < 0:
             raise ValueError(
                 f"max_cached_blocks must be >= 0, got {max_cached_blocks}")
         self.pool = pool
         self.max_cached_blocks = max_cached_blocks
+        # reclaim-phase span sink (repro.obs.trace); the engine stamps the
+        # current tick on the tracer, so the deep reclaim callback needs
+        # no tick plumbing
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._roots: dict[Hashable, TrieNode] = {}
         self._nodes: dict[int, TrieNode] = {}   # block id -> node
         self._clock = 0
@@ -253,7 +258,8 @@ class PrefixCache:
     def _reclaim(self, need: int) -> int:
         """BlockPool's pressure valve: called on alloc shortfall, before
         the pool reports OOM."""
-        freed = self._evict_lru(need)
+        with self.tracer.phase("reclaim", need=need):
+            freed = self._evict_lru(need)
         self.reclaimed_blocks += freed
         return freed
 

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.serve.blockpool import BlockPool
 from repro.serve.policy import SchedPolicy, get_policy
 from repro.serve.prefixcache import PrefixCache
@@ -61,7 +62,7 @@ class SlotScheduler:
                  pool: BlockPool | None = None,
                  prefix_cache: PrefixCache | None = None,
                  policy: str | SchedPolicy | None = None,
-                 spec: bool = False):
+                 spec: bool = False, tracer=None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if prefix_cache is not None and pool is None:
@@ -73,6 +74,8 @@ class SlotScheduler:
         self.pool = pool
         self.prefix_cache = prefix_cache
         self.policy = get_policy(policy)
+        # lifecycle event sink (repro.obs.trace); NULL_TRACER when untraced
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # speculative decoding: submit-time validation rejects requests
         # the greedy-verify engine cannot serve (non-greedy sampling)
         self.spec = bool(spec)
@@ -108,6 +111,9 @@ class SlotScheduler:
         request.arrival_tick = self.tick
         request.submitted_s = now_s
         self.queue.append(request)
+        self.tracer.request_event(
+            "submit", request.request_id, prompt_len=request.prompt_len,
+            priority=request.priority, deadline_s=request.deadline_s)
         return request
 
     @property
@@ -224,6 +230,9 @@ class SlotScheduler:
             self._prefill_order.append(slot)
         else:
             st.prefill_done = req.prompt_len   # one-shot admission prefill
+        self.tracer.request_event(
+            "resume" if resume is not None else "admit", req.request_id,
+            slot=slot, cached_tokens=cached_tokens)
         return st
 
     # ------------------------------------------------- speculative lengths
@@ -259,6 +268,9 @@ class SlotScheduler:
                 f"rewind of {n_tokens} tokens exceeds slot {slot}'s "
                 f"written length {have}")
         st.kv_written = have - n_tokens
+        if n_tokens:
+            self.tracer.request_event("rewind", st.request.request_id,
+                                      slot=slot, n=n_tokens)
         return st
 
     # ------------------------------------------------------- preemption
@@ -293,6 +305,8 @@ class SlotScheduler:
         st.slot = -1
         self._paused[st.request.request_id] = st
         self.queue.append(st.request)
+        self.tracer.request_event("preempt", st.request.request_id,
+                                  slot=slot, tokens=len(st.tokens))
         return st
 
     # -------------------------------------------------------- deadlines
@@ -307,6 +321,14 @@ class SlotScheduler:
         st.finished_s = now_s
         self.finished.append(st)
         self._deadline_missed += 1
+        # the request never reached submit(): open+close its span here so
+        # the trace still shows one (zero-length) bar for it
+        self.tracer.request_event("submit", request.request_id,
+                                  prompt_len=request.prompt_len,
+                                  priority=request.priority,
+                                  deadline_s=request.deadline_s)
+        self.tracer.request_event("finish", request.request_id,
+                                  reason="deadline_missed", expired=True)
         return st
 
     def expire_deadlines(self, now_s: float) -> list[RequestState]:
@@ -327,6 +349,9 @@ class SlotScheduler:
                 st.finished_s = now_s
                 self.finished.append(st)
                 self._deadline_missed += 1
+                self.tracer.request_event("finish", r.request_id,
+                                          reason="deadline_missed",
+                                          queued=True)
                 out.append(st)
             else:
                 keep.append(r)
@@ -370,6 +395,9 @@ class SlotScheduler:
             self._deadline_missed += 1
         else:
             self._evictions[reason] = self._evictions.get(reason, 0) + 1
+        self.tracer.request_event("finish", st.request.request_id,
+                                  reason=reason, slot=slot,
+                                  tokens=len(st.tokens))
         if self.pool is not None and st.blocks:
             if self.prefix_cache is not None:
                 # adopt the full-block prefixes before dropping references

@@ -151,6 +151,11 @@ class SpecStats:
             "verify_s": self.verify_s,
         }
 
+    def publish(self, registry, prefix: str = "serve_spec") -> int:
+        """Mirror the counters into a :class:`repro.obs.registry.Registry`
+        as ``repro_serve_spec_*`` gauges; returns how many were set."""
+        return registry.ingest(prefix, self.to_dict())
+
 
 def greedy_rows(logits: np.ndarray, vocab_size: int) -> np.ndarray:
     """Argmax over the true vocab for one lane's (S, Vp) verify logits —

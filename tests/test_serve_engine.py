@@ -159,14 +159,13 @@ def test_engine_metrics_export(dense_setup, tmp_path):
     assert d["slo"]["0"]["n"] == 3 and d["slo"]["0"]["miss_rate"] == 0.0
     assert d["budget"]["target_ttft_s"] is None
     assert d["budget"]["final_chunks"] == 1  # no target: pinned at min
-    assert d["prefix_cache"] == {}           # section always exported
-    assert d["speculation"] == {"enabled": False}   # same
+    # section presence/shape is pinned by tests/test_metrics_schema.py
     assert d["plan_cache"]["steady_state"] is True
 
 
-def test_engine_metrics_speculation_schema(dense_setup, tmp_path):
-    """Schema check for the speculation section (docs/serving.md): every
-    counter the CI spec smoke asserts on is present and consistent."""
+def test_engine_metrics_speculation_consistency(dense_setup, tmp_path):
+    """Semantic checks for the speculation counters (key/type coverage
+    lives in tests/test_metrics_schema.py's golden walker)."""
     cfg, mesh, params = dense_setup
     engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=24,
                          prompt_pad=8, kv_block_size=8,
@@ -178,12 +177,6 @@ def test_engine_metrics_speculation_schema(dense_setup, tmp_path):
     assert d["engine"]["spec"] is True
     assert d["engine"]["spec_k"] == 2
     sp = d["speculation"]
-    for key in ("enabled", "spec_k", "rounds", "proposed_tokens",
-                "accepted_tokens", "bonus_tokens", "committed_tokens",
-                "acceptance_rate", "mean_accepted_len",
-                "mean_committed_per_round", "draft_s", "verify_s",
-                "draft_arch"):
-        assert key in sp, key
     assert sp["enabled"] is True and sp["spec_k"] == 2
     assert sp["proposed_tokens"] == sp["rounds"] * 2
     assert 0.0 <= sp["acceptance_rate"] <= 1.0
@@ -193,9 +186,9 @@ def test_engine_metrics_speculation_schema(dense_setup, tmp_path):
     assert d["plan_cache"]["steady_state"] is True
 
 
-def test_engine_metrics_prefix_cache_schema(dense_setup, tmp_path):
-    """Schema check for the prefix_cache section (docs/serving.md): every
-    counter the CI smoke asserts on is present and consistent."""
+def test_engine_metrics_prefix_cache_consistency(dense_setup, tmp_path):
+    """Semantic checks for the prefix_cache counters (key/type coverage
+    lives in tests/test_metrics_schema.py's golden walker)."""
     cfg, mesh, params = dense_setup
     engine = ServeEngine(cfg, mesh, params, num_slots=2, max_len=16,
                          prompt_pad=8, kv_block_size=4, num_kv_blocks=33,
@@ -206,11 +199,6 @@ def test_engine_metrics_prefix_cache_schema(dense_setup, tmp_path):
     assert d["engine"]["prefix_cache"] is True
     assert d["engine"]["prefix_cache_blocks"] == 8
     px = d["prefix_cache"]
-    for key in ("lookups", "lookup_tokens", "hits", "hit_tokens", "hit_rate",
-                "inserted_blocks", "duplicate_blocks", "cached_blocks",
-                "cached_idle_blocks", "reclaimed_blocks", "trimmed_blocks",
-                "max_cached_blocks"):
-        assert key in px, key
     assert px["lookups"] == 3
     assert px["lookup_tokens"] == 18
     assert 0.0 <= px["hit_rate"] <= 1.0

@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Validate a flight-recorder Chrome trace JSON (CI trace-artifact gate).
+
+Thin CLI over :func:`repro.obs.trace.validate_chrome_trace`::
+
+  PYTHONPATH=src python tools/validate_trace.py serve_trace.json \\
+      --require-phases expire,bind,prefill-chunk,decode,sample \\
+      --min-requests 8 --min-preempts 1
+
+Exit 0 and a one-line summary when the file is a well-formed trace with
+at least one complete span per required phase; exit 1 with the
+validator's complaint otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs.trace import validate_chrome_trace  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--require-phases", default="", metavar="A,B,C",
+                    help="comma-separated phase names that must each have "
+                         ">= 1 complete span")
+    ap.add_argument("--min-requests", type=int, default=0, metavar="N",
+                    help="require >= N completed request async spans")
+    ap.add_argument("--min-preempts", type=int, default=0, metavar="N",
+                    help="require >= N preempt markers")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        obj = json.load(f)
+    phases = tuple(p for p in args.require_phases.split(",") if p)
+    try:
+        info = validate_chrome_trace(
+            obj, require_phases=phases, min_requests=args.min_requests,
+            min_preempts=args.min_preempts)
+    except ValueError as e:
+        print(f"FAIL: {args.trace}: {e}", file=sys.stderr)
+        return 1
+    spans = sum(info["phase_spans"].values())
+    print(f"OK: {args.trace}: {info['events']} events, {spans} phase spans "
+          f"across {len(info['phase_spans'])} phases, "
+          f"{info['completed_requests']} completed requests, "
+          f"{info['preempts']} preempts")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
