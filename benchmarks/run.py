@@ -82,6 +82,7 @@ def main() -> None:
         "wallclock": [wallclock.run],
         "roofline": [roofline_cells.run],
         "serve": [serve_engine.run],
+        "kvquant": [serve_engine.run_kvquant],
     }
     if args.list:
         for key, fns in modules.items():

@@ -21,6 +21,13 @@ must match the contiguous engine token-for-token, stay plan-warm, and its
 whole-pool footprint must be <= 0.5x the contiguous per-slot footprint at
 the same decode width — the memory-balance claim of the paged refactor.
 
+A **kv-quant** pair serves the same trace through the paged engine with
+the pool stored bf16, then int8 (per-block scales, in-gather dequant) at
+an equal byte budget: the int8 pool must hold >= 1.9x the blocks, its
+greedy streams must match the bf16 run's within the pinned token
+tolerance, and both runs must stay plan-warm with zero lazy solves —
+the serving-capacity claim of KV quantization.
+
 A fourth pair serves a **shared-system-prompt** trace (every request
 repeats one 64-token header + a unique tail) through the paged engine
 with the radix prefix cache off and on: the cached run must produce
@@ -82,6 +89,25 @@ MAX_LEN = PROMPT_PAD + GEN_MAX + 1
 KV_BLOCK = 8
 NUM_KV_BLOCKS = 11
 PREFILL_CHUNK = 8
+# kv-quant pair: the same trace through the paged engine with the pool
+# stored bf16, then int8 at an EQUAL BYTE budget — the int8 pool holds
+# ~1.9x the blocks (0.5x bytes/block plus the per-block scale overhead).
+# block 4 / chunk 16 keeps every chunk bucket {4, 8, 16} block-aligned,
+# and greedy token parity is tolerance-gated (int8 requantization perturbs
+# logits; streams may diverge at near-ties — docs/serving.md pins the
+# policy). Pool size only moves admission timing, never a lane's own
+# greedy stream, so the equal-byte pools don't break the comparison.
+KVQ_BLOCK = 4
+KVQ_CHUNK = 16
+KVQ_KV_BLOCKS = 41          # bf16 side; int8 gets the same bytes in blocks
+KVQ_CAPACITY_MIN = 1.9      # blocks at equal bytes, int8 / bf16
+# Pinned from measurement on this trace/model: int8 logit error is ~0.05
+# on logits spanning ~7, but the random-init bench model's top-2 gaps dip
+# to ~0.002, so greedy streams fork at near-ties and stay forked (0.458
+# measured). A write-path bug (stale block content, scale corruption)
+# craters this to ~0 — the gate catches that class; bitwise-level parity
+# lives in tests/test_paged_kv.py at a pinned *logit* tolerance.
+KVQ_TOKEN_MATCH_MIN = 0.4
 # prefix run: 12 requests repeating one 64-token header (8 full KV blocks)
 # + a 4-8 token unique tail. The first NUM_SLOTS admissions race ahead of
 # the first retirement and miss; every later admission matches the whole
@@ -243,6 +269,58 @@ def run_paged(cfg, mesh, params) -> dict:
     out["deferred_admissions"] = (
         out["metrics"]["aggregate"]["deferred_admissions"])
     return out
+
+
+def run_kvquant_pair(cfg, mesh, params) -> dict:
+    """The mixed-length trace through the paged engine, pool stored bf16
+    then int8 with per-block scales — the int8 run gets the same *byte*
+    budget, which buys it ~1.9x the blocks. Both runs must be plan-warm
+    with zero lazy solves, and the int8 run's greedy streams must match
+    the bf16 run's within the pinned tolerance (requantization perturbs
+    logits at the last bit; near-tie argmaxes may flip)."""
+    from repro.quant.kvcache import KVCacheDtype, kv_block_bytes
+    common = dict(num_slots=NUM_SLOTS, max_len=MAX_LEN,
+                  prompt_pad=PROMPT_PAD, kv_block_size=KVQ_BLOCK,
+                  prefill_chunk=KVQ_CHUNK)
+    bpb_bf16 = kv_block_bytes(KVQ_BLOCK, cfg.n_kv_heads, cfg.head_dim,
+                              KVCacheDtype.BF16, n_layers=cfg.n_layers)
+    bpb_int8 = kv_block_bytes(KVQ_BLOCK, cfg.n_kv_heads, cfg.head_dim,
+                              KVCacheDtype.INT8, n_layers=cfg.n_layers)
+    budget_bytes = KVQ_KV_BLOCKS * bpb_bf16
+    int8_blocks = budget_bytes // bpb_int8
+
+    bf16 = ServeEngine(cfg, mesh, params, **common,
+                       num_kv_blocks=KVQ_KV_BLOCKS)
+    warm = bf16.plan_warmup()
+    bf16_out = _engine_result(bf16, cfg, warm)
+    quant = ServeEngine(cfg, mesh, params, **common,
+                        num_kv_blocks=int8_blocks, kv_quantize="int8")
+    warm_q = quant.plan_warmup()
+    quant_out = _engine_result(quant, cfg, warm_q)
+
+    want = bf16_out["tokens_by_request"]
+    got = quant_out["tokens_by_request"]
+    total = sum(len(v) for v in want.values())
+    matched = sum(sum(a == b for a, b in zip(want[k], got.get(k, [])))
+                  for k in want)
+    kvq = quant_out["metrics"]["kv_cache"]
+    return {
+        "bf16": bf16_out,
+        "int8": quant_out,
+        "kv_cache": kvq,
+        "budget_bytes": budget_bytes,
+        "bf16_blocks": KVQ_KV_BLOCKS,
+        "int8_blocks": int8_blocks,
+        "capacity_ratio": int8_blocks / KVQ_KV_BLOCKS,
+        "bytes_ratio": kvq["bytes_ratio"],
+        "pool_bytes_int8": kvq["pool_bytes"],
+        "pool_bytes_bf16": KVQ_KV_BLOCKS * bpb_bf16,
+        "token_match_frac": matched / total if total else 1.0,
+        "streams_exact": sum(want[k] == got.get(k) for k in want),
+        "requests": N_REQUESTS,
+        "scale_k_max": kvq["scale_k_max"],
+        "scale_v_max": kvq["scale_v_max"],
+    }
 
 
 def _prefix_trace(cfg):
@@ -442,6 +520,7 @@ def main(json_path: str | None = None, emit=print, strict: bool = True,
         static = run_static(cfg, mesh, params)
         engine = run_engine(cfg, mesh, params)
         paged = run_paged(cfg, mesh, params)
+        kvquant = run_kvquant_pair(cfg, mesh, params)
         prefix = run_prefix_pair(cfg, mesh, params)
         slo = run_slo_pair(cfg, mesh, params, trace_path=trace_path)
         spec = run_spec_pair(mesh)
@@ -462,6 +541,13 @@ def main(json_path: str | None = None, emit=print, strict: bool = True,
          f"mem={mem_ratio:.2f}x match={token_match} "
          f"deferred={paged['deferred_admissions']} "
          f"steady={paged['plan_cache']['steady_state']}")
+    emit(f"serve/kvquant,{kvquant['int8']['wall_s']*1e6/kvquant['int8']['useful_tokens']:.1f},"
+         f"tput={kvquant['int8']['tokens_per_sec']:.1f}tok/s "
+         f"blocks={kvquant['bf16_blocks']}->{kvquant['int8_blocks']} "
+         f"({kvquant['capacity_ratio']:.2f}x at equal bytes) "
+         f"bytes={kvquant['bytes_ratio']:.3f}x "
+         f"parity={kvquant['token_match_frac']:.3f} "
+         f"steady={kvquant['int8']['plan_cache']['steady_state']}")
     emit(f"serve/prefix,{prefix['on']['wall_s']*1e6/prefix['on']['useful_tokens']:.1f},"
          f"tput={prefix['on']['tokens_per_sec']:.1f}tok/s "
          f"prefill={prefix['prefilled_tokens']}/{prefix['prompt_tokens']} "
@@ -482,11 +568,15 @@ def main(json_path: str | None = None, emit=print, strict: bool = True,
          f"speedup={spd:.2f}x accept={spec['acceptance_rate']:.2f} "
          f"match={spec['token_match']} "
          f"steady={spec['spec']['plan_cache']['steady_state']}")
-    for r in (engine, paged, prefix["off"], prefix["on"],
+    for r in (engine, paged, kvquant["bf16"], kvquant["int8"],
+              prefix["off"], prefix["on"],
               slo["fifo"], slo["edf"], spec["base"], spec["spec"]):
         r.pop("tokens_by_request")  # parity input, noise in the JSON
     result = {"provenance": prov,
               "static": static, "engine": engine, "paged": paged,
+              "kvquant": kvquant,
+              "kvquant_capacity_ratio": kvquant["capacity_ratio"],
+              "kvquant_token_match_frac": kvquant["token_match_frac"],
               "prefix": prefix, "slo": slo, "spec": spec,
               "spec_speedup": spd,
               "spec_token_match": spec["token_match"],
@@ -518,6 +608,31 @@ def main(json_path: str | None = None, emit=print, strict: bool = True,
             raise SystemExit(
                 f"paged pool footprint {mem_ratio:.2f}x exceeds the 0.5x "
                 f"contiguous bound")
+        if not (kvquant["bf16"]["plan_cache"]["steady_state"]
+                and kvquant["int8"]["plan_cache"]["steady_state"]):
+            raise SystemExit("a kv-quant pair engine loop was not plan-warm")
+        if (kvquant["bf16"]["plan_cache"]["lazy_solves"]
+                or kvquant["int8"]["plan_cache"]["lazy_solves"]):
+            raise SystemExit("kv-quant pair performed lazy plan solves")
+        if kvquant["capacity_ratio"] < KVQ_CAPACITY_MIN:
+            raise SystemExit(
+                f"int8 pool holds only {kvquant['capacity_ratio']:.2f}x "
+                f"the bf16 blocks at equal bytes (need >= "
+                f"{KVQ_CAPACITY_MIN}x)")
+        if kvquant["pool_bytes_int8"] > kvquant["pool_bytes_bf16"]:
+            raise SystemExit(
+                f"int8 pool exceeded the byte budget: "
+                f"{kvquant['pool_bytes_int8']} > "
+                f"{kvquant['pool_bytes_bf16']}")
+        if kvquant["token_match_frac"] < KVQ_TOKEN_MATCH_MIN:
+            raise SystemExit(
+                f"int8 greedy streams matched only "
+                f"{kvquant['token_match_frac']:.3f} of bf16 tokens "
+                f"(tolerance: {KVQ_TOKEN_MATCH_MIN})")
+        if kvquant["streams_exact"] < 1:
+            raise SystemExit(
+                "no int8 greedy stream matched bf16 exactly — divergence "
+                "beyond near-tie flips (write-path corruption?)")
         if not prefix["token_match"]:
             raise SystemExit(
                 "prefix-cache run diverged from the cache-off run")
@@ -571,6 +686,24 @@ def main(json_path: str | None = None, emit=print, strict: bool = True,
 def run(emit) -> None:
     """benchmarks.run harness entry."""
     main(emit=lambda line: _emit_row(emit, line), strict=False)
+
+
+def run_kvquant(emit) -> None:
+    """benchmarks.run harness entry: the kv-quant pair alone (registered
+    as its own key so the capacity/parity row is cheap to re-measure)."""
+    cfg = bench_config()
+    mesh = make_local_mesh()
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    with use_context():
+        kvquant = run_kvquant_pair(cfg, mesh, params)
+    emit("serve/kvquant",
+         kvquant["int8"]["wall_s"] * 1e6 / kvquant["int8"]["useful_tokens"],
+         f"tput={kvquant['int8']['tokens_per_sec']:.1f}tok/s "
+         f"blocks={kvquant['bf16_blocks']}->{kvquant['int8_blocks']} "
+         f"({kvquant['capacity_ratio']:.2f}x at equal bytes) "
+         f"bytes={kvquant['bytes_ratio']:.3f}x "
+         f"parity={kvquant['token_match_frac']:.3f} "
+         f"steady={kvquant['int8']['plan_cache']['steady_state']}")
 
 
 def _emit_row(emit, line: str) -> None:

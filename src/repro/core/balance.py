@@ -33,6 +33,7 @@ from repro.core import perfmodel as pm
 from repro.core.context import resolve_hw
 from repro.kernels.matmul import LANE, SUBLANE, vmem_bytes
 from repro.kernels.ops import GemmPlan
+from repro.quant.kvcache import KVCacheDtype
 
 
 def _candidates(dim_aligned: Sequence[int]) -> list[int]:
@@ -257,6 +258,66 @@ def solve_balanced(
         drops = drops + 1 if step.t_total > best_t else 0
     best = min(steps, key=lambda s: s.t_total)
     return BalanceResult(plan=best.plan, steps=steps, tops=best.tops)
+
+
+def kv_bytes_per_token(
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    kv_dtype: KVCacheDtype | str | None = None,
+    n_layers: int = 1,
+    block_size: int | None = None,
+) -> float:
+    """Pool bytes one cached token occupies across all layers (K + V, plus
+    the amortized per-block scale overhead when the pool is quantized).
+
+    The capacity side of KV quantization: at equal pool bytes, block count
+    scales inversely with this number — int8 halves it (minus the scale
+    overhead), which is where the ~2x serving-capacity claim comes from.
+    """
+    kvd = KVCacheDtype.parse(kv_dtype)
+    per = 2.0 * n_kv_heads * head_dim * kvd.itemsize * n_layers
+    if kvd.quantized:
+        if not block_size:
+            raise ValueError(
+                "quantized KV amortizes per-block scales — pass block_size")
+        per += n_layers * kvd.scale_bytes_per_block(n_kv_heads) / block_size
+    return per
+
+
+@dataclasses.dataclass(frozen=True)
+class KVTrafficEstimate:
+    """Decode-attention memory traffic for one step over one lane's cache."""
+
+    bytes_per_token: float   # pool bytes per cached token (all layers)
+    read_bytes: float        # gather traffic: context_tokens * bytes/token
+    t_mem: float             # seconds to stream it at effective HBM bw
+
+
+def decode_kv_traffic(
+    context_tokens: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    hw: pm.HardwareSpec | str | None = None,
+    kv_dtype: KVCacheDtype | str | None = None,
+    n_layers: int = 1,
+    block_size: int | None = None,
+) -> KVTrafficEstimate:
+    """Memory-side model of a paged decode-attention step: the gather walks
+    the lane's whole live KV once per step, so its time is pure streaming
+    bandwidth — Eqs. 6–7's DRAM-traffic term applied to the cache instead
+    of GEMM tiles. Quantized pools move ~half the bytes per token; the
+    dequant multiply rides the same pass (no extra traffic), which is why
+    in-gather dequant is the memory-bound win and a materialized bf16 copy
+    would forfeit it."""
+    hw = resolve_hw(hw)
+    bpt = kv_bytes_per_token(
+        n_kv_heads, head_dim, kv_dtype=kv_dtype, n_layers=n_layers,
+        block_size=block_size)
+    read = context_tokens * bpt
+    return KVTrafficEstimate(
+        bytes_per_token=bpt, read_bytes=read, t_mem=read / hw.hbm_bw)
 
 
 def solve_exhaustive(

@@ -76,6 +76,14 @@ def add_serve_engine_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
              "(default: full num_slots*max_len capacity; shrink it to make "
              "footprint track admitted tokens — short admissions defer)")
     g.add_argument(
+        "--kv-quantize", default="none", choices=["none", "int8"],
+        help="quantize the paged KV pool's block storage (needs "
+             "--kv-block-size): int8 blocks plus per-block/per-kv-head "
+             "f32 scales, dequantized inside the table-walking gather — "
+             "~0.5x pool bytes, so an equal-byte budget holds ~2x the "
+             "blocks (greedy decode parity is tolerance-gated, see "
+             "docs/serving.md)")
+    g.add_argument(
         "--prefill-chunk", type=int, default=None, metavar="C",
         help="chunked prefill: admit prompts at most C tokens per tick, "
              "interleaved with decode (paged engine only; default: "

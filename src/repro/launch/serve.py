@@ -141,6 +141,9 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
     if args.sched_policy in ("priority", "edf") and not args.kv_block_size:
         raise SystemExit(f"--sched-policy {args.sched_policy} preempts via "
                          "the paged pool: pass --kv-block-size too")
+    if args.kv_quantize != "none" and not args.kv_block_size:
+        raise SystemExit("--kv-quantize stores per-block scales alongside "
+                         "the block pool: pass --kv-block-size too")
     spec_kwargs = {}
     if args.spec_draft_config:
         if not args.kv_block_size:
@@ -209,6 +212,7 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
         max_len=max_len, prompt_pad=prompt_pad, param_axes=param_axes,
         kv_block_size=args.kv_block_size or None,
         num_kv_blocks=args.num_kv_blocks,
+        kv_quantize=args.kv_quantize,
         prefill_chunk=args.prefill_chunk,
         prefix_cache=args.prefix_cache,
         prefix_cache_blocks=args.prefix_cache_blocks,
@@ -250,6 +254,14 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
               f"{bp['memory_ratio']:.2f}x contiguous, "
               f"{m.deferred_admissions} deferred admissions, "
               f"peak internal frag {bp['peak_fragmentation_tokens']} tokens")
+        kv = m.kv_cache
+        if kv.get("quantized"):
+            print(f"[kv-quant] {kv['kv_dtype']}: "
+                  f"{kv['bytes_per_block']} B/block "
+                  f"({kv['bytes_ratio']:.3f}x bf16, pool "
+                  f"{kv['pool_bytes']} vs {kv['bf16_pool_bytes']} B), "
+                  f"max scale k={kv['scale_k_max']:.4g} "
+                  f"v={kv['scale_v_max']:.4g}")
     if m.speculation.get("enabled"):
         sp = m.speculation
         print(f"[spec] draft={sp['draft_arch']}"

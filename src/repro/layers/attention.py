@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.layers import common as cm
+from repro.quant import int8 as q8
+from repro.quant.kvcache import KVCacheDtype
 
 NEG_INF = -1e30
 
@@ -353,22 +355,67 @@ class PagedKVCache(NamedTuple):
     blocks are reusable without scrubbing. Every value a gather can read is
     finite, and invalid positions are masked to ``NEG_INF`` before softmax,
     so garbage never reaches a live request's output.
+
+    With ``kv_dtype=int8`` the pool stores K/V as int8 with per-block,
+    per-kv-head symmetric absmax scales in the parallel ``k_scale`` /
+    ``v_scale`` arrays — quantized at write time, dequantized *inside* the
+    table-directed gather, so no bf16 copy of the cache ever exists
+    (docs/serving.md). ``k_scale is None`` is the bf16 mode switch: the
+    pytree (and every traced graph over it) stays byte-identical to the
+    pre-quantization layout.
     """
 
-    k: jax.Array        # (num_blocks, block_size, Hkv, Dh)
-    v: jax.Array        # (num_blocks, block_size, Hkv, Dh)
+    k: jax.Array        # (num_blocks, block_size, Hkv, Dh) bf16 | int8
+    v: jax.Array        # (num_blocks, block_size, Hkv, Dh) bf16 | int8
     table: jax.Array    # (num_slots, max_blocks) int32 pool-block ids
     length: jax.Array   # (num_slots,) int32 tokens written per slot
+    k_scale: jax.Array | None = None   # (num_blocks, Hkv) f32, int8 only
+    v_scale: jax.Array | None = None   # (num_blocks, Hkv) f32, int8 only
 
 
 def init_paged_kv_cache(num_slots, num_blocks, block_size, max_blocks,
-                        n_kv_heads, head_dim, dtype=jnp.bfloat16):
+                        n_kv_heads, head_dim, dtype=jnp.bfloat16,
+                        kv_dtype=None):
+    kv_dtype = KVCacheDtype.parse(kv_dtype)
+    if kv_dtype.quantized:
+        sd = kv_dtype.storage_dtype
+        # scales start at 1.0, never 0: a zero block dequantizes to 0
+        # either way and every scale a gather can read stays finite
+        return PagedKVCache(
+            k=jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), sd),
+            v=jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), sd),
+            table=jnp.zeros((num_slots, max_blocks), jnp.int32),
+            length=jnp.zeros((num_slots,), jnp.int32),
+            k_scale=jnp.ones((num_blocks, n_kv_heads), jnp.float32),
+            v_scale=jnp.ones((num_blocks, n_kv_heads), jnp.float32),
+        )
     return PagedKVCache(
         k=jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), dtype),
         v=jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), dtype),
         table=jnp.zeros((num_slots, max_blocks), jnp.int32),
         length=jnp.zeros((num_slots,), jnp.int32),
     )
+
+
+def _quantized_scatter(pool, scales, blk, keep_old, write_new, newv):
+    """Whole-block dequant-merge-requantize write into the int8 pool.
+
+    ``blk`` (...,) are the touched pool-block ids; ``keep_old`` /
+    ``write_new`` (..., block_size) mask block offsets; ``newv``
+    (..., block_size, Hkv, Dh) holds the incoming values at ``write_new``
+    positions. Offsets neither kept nor written are zeroed, so a block's
+    stored scale depends only on the tokens that are actually valid in it
+    — stale tails (rejected speculation, reused blocks) can never inflate
+    the grid. Distinct lanes own distinct blocks, so duplicate scatter
+    indices only ever collide on the null block 0, whose content is never
+    validly read.
+    """
+    old = q8.dequantize_block(pool[blk], scales[blk])
+    merged = jnp.where(write_new[..., None, None], newv.astype(jnp.float32),
+                       jnp.where(keep_old[..., None, None], old, 0.0))
+    qblk, qs = q8.quantize_block(merged)
+    return (pool.at[blk].set(qblk, mode="drop"),
+            scales.at[blk].set(qs, mode="drop"))
 
 
 def paged_prefill_attention(
@@ -402,17 +449,44 @@ def paged_prefill_attention(
     # scatter the chunk's valid K/V into the slot's blocks
     valid = jnp.arange(C) < true_len
     row = cache.table[slot]                               # (max_blocks,)
-    blk = jnp.where(valid, row[jnp.minimum(pos // bs, mb - 1)], 0)
-    off = jnp.where(valid, pos % bs, 0)
-    ck = cache.k.at[blk, off].set(k[0].astype(cache.k.dtype), mode="drop")
-    cv = cache.v.at[blk, off].set(v[0].astype(cache.v.dtype), mode="drop")
+    if cache.k_scale is None:
+        blk = jnp.where(valid, row[jnp.minimum(pos // bs, mb - 1)], 0)
+        off = jnp.where(valid, pos % bs, 0)
+        ck = cache.k.at[blk, off].set(k[0].astype(cache.k.dtype),
+                                      mode="drop")
+        cv = cache.v.at[blk, off].set(v[0].astype(cache.v.dtype),
+                                      mode="drop")
+        ks = vs = None
+    else:
+        # int8 pool: rewrite every block the chunk touches whole. A chunk
+        # of C tokens spans at most C // bs + 2 consecutive table slots
+        # from start // bs; out-of-table candidates redirect to block 0.
+        T = C // bs + 2
+        cand_ti = start // bs + jnp.arange(T)
+        blk = jnp.where(cand_ti < mb, row[jnp.minimum(cand_ti, mb - 1)], 0)
+        bpos = cand_ti[:, None] * bs + jnp.arange(bs)[None, :]   # (T, bs)
+        write_new = (bpos >= start) & (bpos < start + true_len)
+        keep_old = bpos < start              # earlier chunks' tokens
+        src = jnp.clip(bpos - start, 0, C - 1)
+        ck, ks = _quantized_scatter(cache.k, cache.k_scale, blk,
+                                    keep_old, write_new, k[0][src])
+        cv, vs = _quantized_scatter(cache.v, cache.v_scale, blk,
+                                    keep_old, write_new, v[0][src])
     new_cache = PagedKVCache(k=ck, v=cv, table=cache.table,
-                             length=cache.length)
+                             length=cache.length, k_scale=ks, v_scale=vs)
     # gather the slot's full logical region (prefix + this chunk) and run
     # the same masked contraction plain_attention would
     n_heads = q.shape[2]
-    kr = ck[row].reshape(1, mb * bs, n_kv, hd)
-    vr = cv[row].reshape(1, mb * bs, n_kv, hd)
+    if ks is None:
+        kr = ck[row].reshape(1, mb * bs, n_kv, hd)
+        vr = cv[row].reshape(1, mb * bs, n_kv, hd)
+    else:
+        # dequantize inside the gather: the pool is read as int8; the
+        # bf16 view exists only as this chunk-sized activation
+        kr = q8.dequantize_block(ck[row], ks[row], q.dtype).reshape(
+            1, mb * bs, n_kv, hd)
+        vr = q8.dequantize_block(cv[row], vs[row], q.dtype).reshape(
+            1, mb * bs, n_kv, hd)
     kr = _repeat_kv(kr, n_heads // n_kv)
     vr = _repeat_kv(vr, n_heads // n_kv)
     scale = hd ** -0.5
@@ -463,13 +537,33 @@ def paged_decode_attention(
     blk = cache.table[rows, ti]
     if active is not None:
         blk = jnp.where(active.astype(bool), blk, 0)       # null-block spill
-    ck = cache.k.at[blk, pos % bs].set(k[:, 0].astype(cache.k.dtype),
-                                       mode="drop")
-    cv = cache.v.at[blk, pos % bs].set(v[:, 0].astype(cache.v.dtype),
-                                       mode="drop")
-    new_cache = PagedKVCache(k=ck, v=cv, table=cache.table, length=pos + 1)
-    gk = ck[cache.table].reshape(B, mb * bs, n_kv, hd)
-    gv = cv[cache.table].reshape(B, mb * bs, n_kv, hd)
+    if cache.k_scale is None:
+        ck = cache.k.at[blk, pos % bs].set(k[:, 0].astype(cache.k.dtype),
+                                           mode="drop")
+        cv = cache.v.at[blk, pos % bs].set(v[:, 0].astype(cache.v.dtype),
+                                           mode="drop")
+        ks = vs = None
+    else:
+        # int8 pool: each lane rewrites its current block whole — keep
+        # the offsets before the append point, zero the tail past it
+        ar = jnp.arange(bs)[None, :]
+        off = (pos % bs)[:, None]
+        newv_k = jnp.broadcast_to(k[:, 0][:, None], (B, bs, n_kv, hd))
+        newv_v = jnp.broadcast_to(v[:, 0][:, None], (B, bs, n_kv, hd))
+        ck, ks = _quantized_scatter(cache.k, cache.k_scale, blk,
+                                    ar < off, ar == off, newv_k)
+        cv, vs = _quantized_scatter(cache.v, cache.v_scale, blk,
+                                    ar < off, ar == off, newv_v)
+    new_cache = PagedKVCache(k=ck, v=cv, table=cache.table, length=pos + 1,
+                             k_scale=ks, v_scale=vs)
+    if ks is None:
+        gk = ck[cache.table].reshape(B, mb * bs, n_kv, hd)
+        gv = cv[cache.table].reshape(B, mb * bs, n_kv, hd)
+    else:
+        gk = q8.dequantize_block(ck[cache.table], ks[cache.table],
+                                 q.dtype).reshape(B, mb * bs, n_kv, hd)
+        gv = q8.dequantize_block(cv[cache.table], vs[cache.table],
+                                 q.dtype).reshape(B, mb * bs, n_kv, hd)
     n_heads = q.shape[2]
     scale = hd ** -0.5
     kr = _repeat_kv(gk, n_heads // n_kv)
@@ -531,18 +625,51 @@ def paged_verify_attention(
         q = cm.apply_rotary(q, sin, cos)
         k = cm.apply_rotary(k, sin, cos)
     rows = jnp.arange(B)[:, None]
-    ti = jnp.minimum(pos // bs, mb - 1)
-    blk = cache.table[rows, ti]                            # (B, S)
-    spill = pos >= mb * bs
-    if active is not None:
-        spill = spill | ~active.astype(bool)[:, None]
-    blk = jnp.where(spill, 0, blk)                         # null-block spill
-    ck = cache.k.at[blk, pos % bs].set(k.astype(cache.k.dtype), mode="drop")
-    cv = cache.v.at[blk, pos % bs].set(v.astype(cache.v.dtype), mode="drop")
+    if cache.k_scale is None:
+        ti = jnp.minimum(pos // bs, mb - 1)
+        blk = cache.table[rows, ti]                        # (B, S)
+        spill = pos >= mb * bs
+        if active is not None:
+            spill = spill | ~active.astype(bool)[:, None]
+        blk = jnp.where(spill, 0, blk)                     # null-block spill
+        ck = cache.k.at[blk, pos % bs].set(k.astype(cache.k.dtype),
+                                           mode="drop")
+        cv = cache.v.at[blk, pos % bs].set(v.astype(cache.v.dtype),
+                                           mode="drop")
+        ks = vs = None
+    else:
+        # int8 pool: rewrite the blocks the S-token window touches whole.
+        # Candidates past the table (or inactive lanes) redirect to block
+        # 0 — the same spill rule as the bf16 single-position writes.
+        T = S // bs + 2
+        cand_ti = cache.length[:, None] // bs + jnp.arange(T)[None, :]
+        ok = cand_ti < mb                                  # (B, T)
+        if active is not None:
+            ok = ok & active.astype(bool)[:, None]
+        cblk = jnp.where(
+            ok, cache.table[rows, jnp.minimum(cand_ti, mb - 1)], 0)
+        bpos = (cand_ti[:, :, None] * bs
+                + jnp.arange(bs)[None, None, :])           # (B, T, bs)
+        start_l = cache.length[:, None, None]
+        write_new = (bpos >= start_l) & (bpos < start_l + S)
+        keep_old = bpos < start_l                          # committed prefix
+        src = jnp.clip(bpos - start_l, 0, S - 1)
+        newv_k = k[jnp.arange(B)[:, None, None], src]      # (B, T, bs, ...)
+        newv_v = v[jnp.arange(B)[:, None, None], src]
+        ck, ks = _quantized_scatter(cache.k, cache.k_scale, cblk,
+                                    keep_old, write_new, newv_k)
+        cv, vs = _quantized_scatter(cache.v, cache.v_scale, cblk,
+                                    keep_old, write_new, newv_v)
     new_cache = PagedKVCache(k=ck, v=cv, table=cache.table,
-                             length=cache.length + S)
-    gk = ck[cache.table].reshape(B, mb * bs, n_kv, hd)
-    gv = cv[cache.table].reshape(B, mb * bs, n_kv, hd)
+                             length=cache.length + S, k_scale=ks, v_scale=vs)
+    if ks is None:
+        gk = ck[cache.table].reshape(B, mb * bs, n_kv, hd)
+        gv = cv[cache.table].reshape(B, mb * bs, n_kv, hd)
+    else:
+        gk = q8.dequantize_block(ck[cache.table], ks[cache.table],
+                                 q.dtype).reshape(B, mb * bs, n_kv, hd)
+        gv = q8.dequantize_block(cv[cache.table], vs[cache.table],
+                                 q.dtype).reshape(B, mb * bs, n_kv, hd)
     n_heads = q.shape[2]
     scale = hd ** -0.5
     kr = _repeat_kv(gk, n_heads // n_kv)

@@ -18,6 +18,7 @@ import jax
 from repro.configs.base import ModelConfig
 from repro.models import encdec, lm, vision_lm
 from repro.models.lm import lm_loss
+from repro.quant.kvcache import KVCacheDtype
 
 _LM_FAMILIES = ("dense", "moe", "rwkv", "hybrid")
 
@@ -54,11 +55,16 @@ def forward(params, batch: dict[str, Any], cfg: ModelConfig, mesh=None):
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       per_slot: bool = False, kv_block_size: int | None = None,
-                      num_kv_blocks: int | None = None):
+                      num_kv_blocks: int | None = None, kv_dtype=None):
     if cfg.family in _LM_FAMILIES:
         return lm.init_decode_state(cfg, batch, max_len, per_slot=per_slot,
                                     kv_block_size=kv_block_size,
-                                    num_kv_blocks=num_kv_blocks)
+                                    num_kv_blocks=num_kv_blocks,
+                                    kv_dtype=kv_dtype)
+    if kv_dtype is not None and KVCacheDtype.parse(kv_dtype).quantized:
+        raise ValueError(
+            f"quantized KV is LM-family paged-layout only, not "
+            f"{cfg.family!r}")
     if kv_block_size:
         raise ValueError(
             f"paged decode state is LM-family only, not {cfg.family!r}")

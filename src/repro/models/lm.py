@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.layers import attention as attn
+from repro.quant.kvcache import KVCacheDtype
 from repro.layers import common as cm
 from repro.layers import mamba as mb
 from repro.layers import mlp as mlp_lib
@@ -354,7 +355,7 @@ def lm_loss(params, hidden, labels, cfg: ModelConfig):
 # ---------------------------------------------------------------- decode
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       per_slot: bool = False, kv_block_size: int | None = None,
-                      num_kv_blocks: int | None = None):
+                      num_kv_blocks: int | None = None, kv_dtype=None):
     """``per_slot=True`` makes the KV length a (batch,) vector — one decode
     position per slot lane, the continuous-batching engine's cache layout
     (dense/moe only; other families keep their scalar/implicit clocks).
@@ -365,8 +366,18 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     blocks of ``kv_block_size`` tokens (block 0 reserved as the null
     block), a ``(batch, ceil(max_len/block))`` block table, and per-slot
     lengths. Pool capacity then tracks admitted tokens, not
-    ``batch * max_len``."""
+    ``batch * max_len``.
+
+    ``kv_dtype`` (:class:`repro.quant.KVCacheDtype` or its string name)
+    selects the paged pool's storage format: int8 allocates the K/V pool
+    in int8 plus ``(L, num_kv_blocks, n_kv_heads)`` f32 scale arrays
+    (initialized to 1.0 — a zero block dequantizes to zero at any scale).
+    Paged layout only; the contiguous cache stays ``cfg.dtype``."""
     L, d = cfg.n_layers, cfg.d_model
+    kvd = KVCacheDtype.parse(kv_dtype)
+    if kvd.quantized and not kv_block_size:
+        raise ValueError(
+            f"kv_dtype={kvd.value} needs the paged layout (kv_block_size)")
     if kv_block_size:
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
@@ -378,13 +389,18 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                 f"paged KV needs num_kv_blocks >= 2 (block 0 is the null "
                 f"block), got {num_kv_blocks}")
         max_blocks = -(-max_len // kv_block_size)
+        sd = kvd.storage_dtype if kvd.quantized else cfg.dtype
         kv = attn.PagedKVCache(
             k=jnp.zeros((L, num_kv_blocks, kv_block_size, cfg.n_kv_heads,
-                         cfg.head_dim), cfg.dtype),
+                         cfg.head_dim), sd),
             v=jnp.zeros((L, num_kv_blocks, kv_block_size, cfg.n_kv_heads,
-                         cfg.head_dim), cfg.dtype),
+                         cfg.head_dim), sd),
             table=jnp.zeros((batch, max_blocks), jnp.int32),
             length=jnp.zeros((batch,), jnp.int32),
+            k_scale=(jnp.ones((L, num_kv_blocks, cfg.n_kv_heads),
+                              jnp.float32) if kvd.quantized else None),
+            v_scale=(jnp.ones((L, num_kv_blocks, cfg.n_kv_heads),
+                              jnp.float32) if kvd.quantized else None),
         )
         return {"kv": kv}
     if cfg.family in ("dense", "moe"):
@@ -565,12 +581,17 @@ def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, slot, start,
     table = kv.table.at[slot].set(blocks)
     x = cm.embed_lookup(params["embed"], tokens, mesh).astype(cfg.dtype)
     C = tokens.shape[1]
+    quantized = kv.k_scale is not None
 
     def body(carry, inp):
         x = carry
-        lp, ck, cv = inp
+        if quantized:
+            lp, ck, cv, cks, cvs = inp
+        else:
+            (lp, ck, cv), cks, cvs = inp, None, None
         h = apply_norm(cfg, lp["ln1"], x)
-        cache = attn.PagedKVCache(k=ck, v=cv, table=table, length=kv.length)
+        cache = attn.PagedKVCache(k=ck, v=cv, table=table, length=kv.length,
+                                  k_scale=cks, v_scale=cvs)
         y, nc = attn.paged_prefill_attention(
             lp["attn"], h, cache, slot=slot, start=start, true_len=true_len,
             rope_theta=cfg.rope_theta)
@@ -588,13 +609,21 @@ def prefill_chunk(params, tokens, cfg: ModelConfig, state, *, slot, start,
                                       activation=cfg.activation)
         else:
             y2 = mlp_lib.mlp(lp["mlp"], h2, activation=cfg.activation)
-        return cm.hint(x + y2, "dp", None, "model"), (nc.k, nc.v)
+        out = ((nc.k, nc.v, nc.k_scale, nc.v_scale) if quantized
+               else (nc.k, nc.v))
+        return cm.hint(x + y2, "dp", None, "model"), out
 
-    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
+    if quantized:
+        x, (nk, nv, nks, nvs) = jax.lax.scan(
+            body, x, (params["layers"], kv.k, kv.v, kv.k_scale, kv.v_scale))
+    else:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
+        nks = nvs = None
     new_len = kv.length.at[slot].set(
         jnp.asarray(start + true_len, jnp.int32))
     new_state = {**state, "kv": attn.PagedKVCache(
-        k=nk, v=nv, table=table, length=new_len)}
+        k=nk, v=nv, table=table, length=new_len,
+        k_scale=nks, v_scale=nvs)}
     lp = jnp.broadcast_to(
         jnp.asarray(true_len - 1, jnp.int32), (x.shape[0],))
     h_last = jnp.take_along_axis(x, lp[:, None, None], axis=1)
@@ -631,13 +660,18 @@ def verify_step(params, tokens, cfg: ModelConfig, state, mesh=None,
                          "(init_decode_state with kv_block_size)")
     x = cm.embed_lookup(params["embed"], tokens, mesh).astype(cfg.dtype)
     B, S = tokens.shape
+    quantized = kv.k_scale is not None
 
     def body(carry, inp):
         x = carry
-        lp, ck, cv = inp
+        if quantized:
+            lp, ck, cv, cks, cvs = inp
+        else:
+            (lp, ck, cv), cks, cvs = inp, None, None
         h = apply_norm(cfg, lp["ln1"], x)
         cache = attn.PagedKVCache(k=ck, v=cv, table=kv.table,
-                                  length=kv.length)
+                                  length=kv.length,
+                                  k_scale=cks, v_scale=cvs)
         y, nc = attn.paged_verify_attention(
             lp["attn"], h, cache, rope_theta=cfg.rope_theta, active=active)
         x = x + y
@@ -655,12 +689,20 @@ def verify_step(params, tokens, cfg: ModelConfig, state, mesh=None,
                                       activation=cfg.activation)
         else:
             y2 = mlp_lib.mlp(lp["mlp"], h2, activation=cfg.activation)
-        return cm.hint(x + y2, "dp", None, "model"), (nc.k, nc.v)
+        out = ((nc.k, nc.v, nc.k_scale, nc.v_scale) if quantized
+               else (nc.k, nc.v))
+        return cm.hint(x + y2, "dp", None, "model"), out
 
-    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
+    if quantized:
+        x, (nk, nv, nks, nvs) = jax.lax.scan(
+            body, x, (params["layers"], kv.k, kv.v, kv.k_scale, kv.v_scale))
+    else:
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
+        nks = nvs = None
     step = S if active is None else S * active.astype(kv.length.dtype)
     new_state = {**state, "kv": attn.PagedKVCache(
-        k=nk, v=nv, table=kv.table, length=kv.length + step)}
+        k=nk, v=nv, table=kv.table, length=kv.length + step,
+        k_scale=nks, v_scale=nvs)}
     h = apply_norm(cfg, params["final_norm"], x)
     return _logits(params, cfg, h), new_state
 
@@ -683,14 +725,19 @@ def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
     if cfg.family in ("dense", "moe"):
         kv = state["kv"]
         paged = isinstance(kv, attn.PagedKVCache)
+        quantized = paged and kv.k_scale is not None
 
         def body(carry, inp):
             x = carry
-            lp, ck, cv = inp
+            if quantized:
+                lp, ck, cv, cks, cvs = inp
+            else:
+                (lp, ck, cv), cks, cvs = inp, None, None
             h = apply_norm(cfg, lp["ln1"], x)
             if paged:
                 cache = attn.PagedKVCache(k=ck, v=cv, table=kv.table,
-                                          length=kv.length)
+                                          length=kv.length,
+                                          k_scale=cks, v_scale=cvs)
                 y, nc = attn.paged_decode_attention(
                     lp["attn"], h, cache, rope_theta=cfg.rope_theta,
                     active=active)
@@ -715,13 +762,23 @@ def decode_step(params, tokens, cfg: ModelConfig, state, mesh=None,
                                           activation=cfg.activation)
             else:
                 y2 = mlp_lib.mlp(lp["mlp"], h2, activation=cfg.activation)
-            return cm.hint(x + y2, "dp", None, "model"), (nc.k, nc.v)
+            out = ((nc.k, nc.v, nc.k_scale, nc.v_scale) if quantized
+                   else (nc.k, nc.v))
+            return cm.hint(x + y2, "dp", None, "model"), out
 
-        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], kv.k, kv.v))
+        if quantized:
+            x, (nk, nv, nks, nvs) = jax.lax.scan(
+                body, x,
+                (params["layers"], kv.k, kv.v, kv.k_scale, kv.v_scale))
+        else:
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], kv.k, kv.v))
+            nks = nvs = None
         step = 1 if active is None else active.astype(kv.length.dtype)
         if paged:
             new_state = {"kv": attn.PagedKVCache(
-                k=nk, v=nv, table=kv.table, length=kv.length + step)}
+                k=nk, v=nv, table=kv.table, length=kv.length + step,
+                k_scale=nks, v_scale=nvs)}
         else:
             new_state = {"kv": attn.KVCache(
                 k=nk, v=nv, length=kv.length + step)}

@@ -148,6 +148,18 @@ def decode_state_specs(state_shapes, cfg, mesh: Mesh, paged: bool = False):
         if paged and "kv" in keyname:
             if x.ndim == 2:
                 return P()  # block table: replicated routing metadata
+            if x.ndim == 3:
+                # (L, num_blocks, Hkv) int8-pool scales: ride the pool's
+                # block-axis rule so scales co-locate with their blocks;
+                # heads over 'model' when divisible (same as the pool)
+                entries = [None, None, None]
+                if x.shape[1] % dp_total == 0 and dp_entry is not None:
+                    entries[1] = dp_entry
+                if model > 1 and x.shape[2] % model == 0:
+                    entries[2] = "model"
+                while entries and entries[-1] is None:
+                    entries.pop()
+                return P(*entries)
             # (L, num_blocks, block_size, H, D) pool
             entries = [None] * x.ndim
             if x.shape[1] % dp_total == 0 and dp_entry is not None:

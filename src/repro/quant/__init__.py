@@ -19,21 +19,28 @@ from repro.quant.int8 import (
     absmax_scale,
     combine_scales,
     dequantize,
+    dequantize_block,
     quantize,
+    quantize_block,
     quantize_linear,
     quantize_per_channel,
     quantize_per_tensor,
 )
+from repro.quant.kvcache import KVCacheDtype, kv_block_bytes
 
 __all__ = [
     "QMAX",
     "Calibrator",
+    "KVCacheDtype",
     "QTensor",
     "QuantizedLinear",
     "absmax_scale",
     "combine_scales",
     "dequantize",
+    "dequantize_block",
+    "kv_block_bytes",
     "quantize",
+    "quantize_block",
     "quantize_linear",
     "quantize_per_channel",
     "quantize_per_tensor",

@@ -35,21 +35,38 @@ def _absmax(x: jax.Array, axis: int | None) -> jax.Array:
     return jnp.max(x, axis=red)
 
 
+def _safe_scale(amax: jax.Array) -> jax.Array:
+    """absmax -> scale, guarding all-zero inputs.
+
+    A zero block would otherwise produce scale ``_EPS/127 ≈ 8e-15`` whose
+    reciprocal overflows intermediate f32 math downstream (and a literal
+    zero scale NaNs on dequant). Zero inputs quantize to q=0 regardless of
+    scale, so scale 1.0 is exact for them and keeps every scale a sane
+    finite number.
+    """
+    return jnp.where(amax > 0.0, jnp.maximum(amax, _EPS) / QMAX, 1.0)
+
+
 def absmax_scale(x: jax.Array, axis: int | None = None) -> jax.Array:
-    """Symmetric absmax calibration scale.
+    """Symmetric absmax calibration scale (1.0 for all-zero inputs).
 
     axis=None -> per-tensor scalar scale; axis=i -> per-channel scales for
     channels living on axis ``i`` (reduced over every other axis).
     """
-    return jnp.maximum(_absmax(x, axis), _EPS) / QMAX
+    return _safe_scale(_absmax(x, axis))
 
 
 def quantize(x: jax.Array, scale: jax.Array, axis: int | None = None) -> jax.Array:
-    """x -> int8 on the symmetric grid. ``scale`` broadcasts per ``axis``."""
+    """x -> int8 on the symmetric grid. ``scale`` broadcasts per ``axis``.
+
+    A non-positive scale (a degenerate calibration) is treated as 1.0 —
+    the grid for an all-zero input — instead of dividing by zero.
+    """
     if axis is not None:
         shape = [1] * x.ndim
         shape[axis % x.ndim] = -1
         scale = scale.reshape(shape)
+    scale = jnp.where(scale > 0.0, scale, 1.0)
     q = jnp.round(x.astype(jnp.float32) / scale)
     return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
 
@@ -59,7 +76,29 @@ def dequantize(q: jax.Array, scale: jax.Array, axis: int | None = None) -> jax.A
         shape = [1] * q.ndim
         shape[axis % q.ndim] = -1
         scale = scale.reshape(shape)
-    return q.astype(jnp.float32) * scale
+    return q.astype(jnp.float32) * jnp.where(scale > 0.0, scale, 1.0)
+
+
+def quantize_block(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantize KV pool blocks ``(..., block_size, Hkv, Dh)`` to int8.
+
+    Scales are per-block, per-kv-head: the token and feature axes are
+    reduced away, leaving ``(..., Hkv)`` f32 scales — one symmetric grid
+    per head per block, the granularity the paged-attention gather
+    dequantizes at (``layers.attention``). All-zero blocks (the reserved
+    null block, freshly allocated pool) get scale 1.0, never 0.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))
+    scale = _safe_scale(amax)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None, :, None])
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8), scale
+
+
+def dequantize_block(q: jax.Array, scale: jax.Array,
+                     dtype=jnp.float32) -> jax.Array:
+    """Invert :func:`quantize_block`: int8 blocks ``(..., bs, Hkv, Dh)``
+    with ``(..., Hkv)`` scales back to ``dtype``."""
+    return (q.astype(jnp.float32) * scale[..., None, :, None]).astype(dtype)
 
 
 class QTensor(NamedTuple):
@@ -108,7 +147,7 @@ class Calibrator:
     def scale(self) -> jax.Array:
         if self._amax is None:
             raise ValueError("Calibrator.scale() before any observe()")
-        return jnp.maximum(self._amax, _EPS) / QMAX
+        return _safe_scale(self._amax)
 
 
 def combine_scales(*scales: jax.Array) -> jax.Array:

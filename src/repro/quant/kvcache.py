@@ -1,0 +1,75 @@
+"""KV-cache storage formats for the paged serving engine.
+
+The paged pool (``layers.attention.PagedKVCache``) can store its K/V
+blocks in a narrower dtype than the compute dtype: blocks are quantized
+at write time (per-block, per-kv-head symmetric absmax scales kept in a
+parallel scales array) and dequantized *inside* the table-directed gather
+— no materialized bf16 copy of the cache ever exists.  This module is the
+single source of truth for which formats exist and what they cost in
+bytes, so allocator arithmetic, the balance model's memory terms and the
+serve metrics all agree on the footprint.
+
+``KVCacheDtype`` is an enum rather than a bool so narrower formats (fp8)
+drop in as new members without another plumbing pass: everything
+downstream switches on ``kv_dtype.quantized`` / ``kv_dtype.itemsize``,
+not on a specific member.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+
+class KVCacheDtype(enum.Enum):
+    """Storage format of the paged KV pool (docs/serving.md)."""
+
+    BF16 = "bf16"   # native compute dtype, no scales array
+    INT8 = "int8"   # symmetric per-block/per-kv-head absmax (quant/int8.py)
+
+    @property
+    def quantized(self) -> bool:
+        return self is not KVCacheDtype.BF16
+
+    @property
+    def storage_dtype(self):
+        """The jnp dtype the pool's k/v leaves are allocated in."""
+        return {KVCacheDtype.BF16: jnp.bfloat16,
+                KVCacheDtype.INT8: jnp.int8}[self]
+
+    @property
+    def itemsize(self) -> int:
+        """Bytes per stored K or V element (excluding scales)."""
+        return jnp.dtype(self.storage_dtype).itemsize
+
+    def scale_bytes_per_block(self, n_kv_heads: int) -> int:
+        """Bytes of f32 scales per pool block (K and V each carry one
+        scale per kv head)."""
+        return 2 * 4 * n_kv_heads if self.quantized else 0
+
+    @classmethod
+    def parse(cls, name: "str | KVCacheDtype | None") -> "KVCacheDtype":
+        """'none'/None/'bf16' -> BF16; 'int8' -> INT8; enum passes through."""
+        if isinstance(name, cls):
+            return name
+        if name is None or name in ("none", "bf16"):
+            return cls.BF16
+        try:
+            return cls(name)
+        except ValueError:
+            raise ValueError(
+                f"unknown KV cache dtype {name!r}; "
+                f"one of {[m.value for m in cls]} or 'none'") from None
+
+
+def kv_block_bytes(block_size: int, n_kv_heads: int, head_dim: int,
+                   kv_dtype: KVCacheDtype = KVCacheDtype.BF16,
+                   n_layers: int = 1) -> int:
+    """Bytes one pool block occupies (K + V + scales) across ``n_layers``.
+
+    This is the allocator's unit of account: the serving capacity argument
+    of the KV-quantization PR is exactly ``bf16_block_bytes /
+    int8_block_bytes`` blocks per byte (~2x minus the scales overhead).
+    """
+    kv = 2 * block_size * n_kv_heads * head_dim * kv_dtype.itemsize
+    return n_layers * (kv + kv_dtype.scale_bytes_per_block(n_kv_heads))

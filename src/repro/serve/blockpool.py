@@ -49,7 +49,8 @@ class BlockPool:
     """Ref-counted free-list allocator over ``num_blocks`` blocks of
     ``block_size`` tokens. Block 0 (the null block) is never handed out."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 bytes_per_block: int | None = None):
         if num_blocks < 2:
             raise ValueError(
                 f"num_blocks must be >= 2 (block 0 is the reserved null "
@@ -58,6 +59,10 @@ class BlockPool:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # bytes one block occupies on device (K + V + scales, all layers;
+        # quant.kvcache.kv_block_bytes) — lets OOM decisions and metrics
+        # account in bytes, which is what KV quantization halves
+        self.bytes_per_block = bytes_per_block
         self._free: list[int] = list(range(1, num_blocks))  # heap, block 0 out
         heapq.heapify(self._free)
         self._ref: dict[int, int] = {}      # block -> live refcount (> 0)
@@ -94,6 +99,25 @@ class BlockPool:
 
     def capacity_tokens(self) -> int:
         return self.usable_blocks * self.block_size
+
+    def pool_bytes(self) -> int | None:
+        """Device bytes of the whole pool (None when bytes_per_block is
+        unknown — pre-quantization callers that never passed it)."""
+        if self.bytes_per_block is None:
+            return None
+        return self.num_blocks * self.bytes_per_block
+
+    def bytes_in_use(self) -> int | None:
+        if self.bytes_per_block is None:
+            return None
+        return self._in_use * self.bytes_per_block
+
+    def blocks_for_bytes(self, budget_bytes: int) -> int:
+        """How many pool blocks fit in a byte budget — the capacity side
+        of the KV-quantization argument (equal bytes, ~2x blocks)."""
+        if self.bytes_per_block is None:
+            raise ValueError("blocks_for_bytes needs bytes_per_block")
+        return budget_bytes // self.bytes_per_block
 
     def blocks_for(self, tokens: int) -> int:
         return blocks_for(tokens, self.block_size)
@@ -224,7 +248,7 @@ class BlockPool:
                 if self.usable_blocks else 0.0)
 
     def stats(self) -> dict:
-        return {
+        out = {
             "num_blocks": self.num_blocks,
             "block_size": self.block_size,
             "blocks_in_use": self._in_use,
@@ -238,3 +262,9 @@ class BlockPool:
             "increfs": self.increfs,
             "reclaimed_blocks": self.reclaimed_blocks,
         }
+        if self.bytes_per_block is not None:
+            out["bytes_per_block"] = self.bytes_per_block
+            out["pool_bytes"] = self.pool_bytes()
+            out["bytes_in_use"] = self.bytes_in_use()
+            out["peak_bytes_in_use"] = self.peak_in_use * self.bytes_per_block
+        return out

@@ -27,7 +27,13 @@ compiled step functions (device-side, fixed shapes):
   slot's block table — chunked prefill then starts at the first uncached
   token (zero prefill GEMMs for the shared header), and retirement indexes
   the request's full-block prefixes for the next arrival. Decode output is
-  token-for-token identical to cache-off (serve/prefixcache.py).
+  token-for-token identical to cache-off (serve/prefixcache.py);
+* with **KV quantization** on (``kv_quantize="int8"``, paged only) the
+  pool stores int8 blocks plus per-block/per-kv-head f32 scales
+  (layers/attention.py) — same step-loop shapes, roughly half the pool
+  bytes, so an equal-byte budget holds ~2x the blocks. The block pool
+  carries ``bytes_per_block`` so OOM decisions and metrics account in
+  bytes, and ``metrics.kv_cache`` reports the bytes ratio + scale stats.
 
 Because slot count, chunk buckets, max_len and model dims are all fixed at
 engine build, every tick issues the identical GEMM signature set. The
@@ -55,6 +61,7 @@ from repro.configs.base import ModelConfig
 from repro.core.context import current_context
 from repro.obs.registry import Registry, prom_name
 from repro.obs.trace import NULL_TRACER
+from repro.quant.kvcache import KVCacheDtype, kv_block_bytes
 from repro.serve.blockpool import BlockPool
 from repro.serve.metrics import EngineMetrics
 from repro.serve.policy import BudgetController, SchedPolicy, get_policy
@@ -90,6 +97,7 @@ class ServeEngine:
         param_axes=None,
         kv_block_size: int | None = None,
         num_kv_blocks: int | None = None,
+        kv_quantize: str | KVCacheDtype | None = None,
         prefill_chunk: int | None = None,
         prefix_cache: bool = False,
         prefix_cache_blocks: int | None = None,
@@ -134,6 +142,11 @@ class ServeEngine:
         self.registry = registry if registry is not None else Registry()
         self.metrics_interval_ticks = metrics_interval_ticks
         self.paged = bool(kv_block_size)
+        self.kv_dtype = KVCacheDtype.parse(kv_quantize)
+        if self.kv_dtype.quantized and not self.paged:
+            raise ValueError(
+                "KV quantization stores per-block scales alongside the "
+                "block pool — it needs the paged engine (kv_block_size)")
         self.spec = spec_draft_cfg is not None
         self.spec_k = int(spec_k) if self.spec else 0
         self.spec_draft_cfg = spec_draft_cfg
@@ -189,12 +202,14 @@ class ServeEngine:
                 kv_block_size=self.kv_block_size,
                 num_kv_blocks=self.num_kv_blocks,
                 chunk_buckets=self.chunk_buckets,
-                param_shapes=param_shapes, param_axes=param_axes)
+                param_shapes=param_shapes, param_axes=param_axes,
+                kv_dtype=self.kv_dtype)
             self._init_fn = jax.jit(
                 lambda: models.init_decode_state(
                     cfg, num_slots, max_len, per_slot=True,
                     kv_block_size=self.kv_block_size,
-                    num_kv_blocks=self.num_kv_blocks),
+                    num_kv_blocks=self.num_kv_blocks,
+                    kv_dtype=self.kv_dtype),
                 out_shardings=self.art.state_shardings)
         else:
             self.kv_block_size = None
@@ -245,7 +260,11 @@ class ServeEngine:
         self._t0 = self._now()
         with self.mesh:
             self.state = self._init_fn()
-        pool = (BlockPool(self.num_kv_blocks, self.kv_block_size)
+        pool = (BlockPool(self.num_kv_blocks, self.kv_block_size,
+                          bytes_per_block=kv_block_bytes(
+                              self.kv_block_size, self.cfg.n_kv_heads,
+                              self.cfg.head_dim, self.kv_dtype,
+                              n_layers=self.cfg.n_layers))
                 if self.paged else None)
         cache = (PrefixCache(pool, max_cached_blocks=self.prefix_cache_blocks,
                              tracer=self.tracer)
@@ -288,6 +307,7 @@ class ServeEngine:
             engine_info.update(
                 kv_block_size=self.kv_block_size,
                 num_kv_blocks=self.num_kv_blocks,
+                kv_dtype=self.kv_dtype.value,
                 prefill_chunk=self.prefill_chunk,
                 chunk_buckets=list(self.chunk_buckets),
                 prefix_cache=self.prefix_cache_enabled,
@@ -738,6 +758,37 @@ class ServeEngine:
         self.metrics.deadline_missed = counters["deadline_missed"]
         self.metrics.policy = counters["policy"]
         self.metrics.budget = self.budget.stats()
+        if self.paged:
+            scale_stats = None
+            if self.kv_dtype.quantized:
+                # dequant-error gauges: a block's worst-case quantization
+                # error is scale/2, so absmax-scale statistics over the
+                # pool bound the cache's numeric drift without ever
+                # materializing a bf16 reference copy. The scale arrays
+                # are (L, num_blocks, Hkv) f32 — tiny; host fetch is cheap.
+                # Unwritten blocks still hold the init scale (exactly 1.0;
+                # a requantized block's absmax/127 never lands there) and
+                # would otherwise pin the max at 1.0 — gauge only the
+                # recalibrated slots.
+                ks = np.asarray(self.state["kv"].k_scale, np.float64)
+                vs = np.asarray(self.state["kv"].v_scale, np.float64)
+                ks = ks[ks != 1.0] if (ks != 1.0).any() else ks
+                vs = vs[vs != 1.0] if (vs != 1.0).any() else vs
+                scale_stats = {
+                    "scale_k_mean": float(ks.mean()),
+                    "scale_k_max": float(ks.max()),
+                    "scale_v_mean": float(vs.mean()),
+                    "scale_v_max": float(vs.max()),
+                }
+            self.metrics.record_kv_cache(
+                kv_dtype=self.kv_dtype.value,
+                bytes_per_block=self.sched.pool.bytes_per_block,
+                num_blocks=self.num_kv_blocks,
+                bf16_bytes_per_block=kv_block_bytes(
+                    self.kv_block_size, self.cfg.n_kv_heads,
+                    self.cfg.head_dim, KVCacheDtype.BF16,
+                    n_layers=self.cfg.n_layers),
+                scale_stats=scale_stats)
         if self.sched.prefix_cache is not None:
             self.metrics.record_prefix_cache(self.sched.prefix_cache)
         if self.spec:
@@ -772,6 +823,8 @@ class ServeEngine:
         })
         reg.ingest("serve_sched", self.sched.counters())
         reg.ingest("serve_budget", self.budget.stats())
+        if self.metrics.kv_cache:
+            reg.ingest("serve_kv", self.metrics.kv_cache)
         if self.spec:
             self.spec_stats.publish(reg)
         pcs = current_context().plan_cache.stats

@@ -51,6 +51,7 @@ class EngineMetrics:
     budget: dict[str, Any] = dataclasses.field(default_factory=dict)
     requests: list[dict[str, Any]] = dataclasses.field(default_factory=list)
     block_pool: dict[str, Any] = dataclasses.field(default_factory=dict)
+    kv_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
     prefix_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
     speculation: dict[str, Any] = dataclasses.field(
         default_factory=lambda: {"enabled": False})
@@ -111,6 +112,31 @@ class EngineMetrics:
         stats["memory_ratio"] = (stats["pool_tokens"] / contiguous_tokens
                                  if contiguous_tokens else 0.0)
         self.block_pool = stats
+
+    def record_kv_cache(self, *, kv_dtype: str, bytes_per_block: int,
+                        num_blocks: int, bf16_bytes_per_block: int,
+                        scale_stats: dict[str, Any] | None = None) -> None:
+        """KV-cache storage accounting (paged engines; engine.run, once).
+
+        ``bytes_ratio`` is the headline KV-quantization number: pool bytes
+        relative to the same pool stored bf16 (≈0.5 for int8 plus the
+        per-block scale overhead). ``scale_stats`` (quantized runs) carries
+        the dequant-error gauges — absmax-scale statistics over the live
+        pool; a block's worst-case quantization error is scale/2, so these
+        bound the cache's numeric drift without ever materializing a bf16
+        reference copy (docs/observability.md)."""
+        out = {
+            "kv_dtype": kv_dtype,
+            "quantized": kv_dtype != "bf16",
+            "bytes_per_block": bytes_per_block,
+            "pool_bytes": num_blocks * bytes_per_block,
+            "bf16_pool_bytes": num_blocks * bf16_bytes_per_block,
+            "bytes_ratio": (bytes_per_block / bf16_bytes_per_block
+                            if bf16_bytes_per_block else None),
+        }
+        if scale_stats:
+            out.update(scale_stats)
+        self.kv_cache = out
 
     def record_prefix_cache(self, cache) -> None:
         """Snapshot the radix cache's cumulative counters (engine.run calls
@@ -213,6 +239,7 @@ class EngineMetrics:
             "slo": self.slo_summary(),
             "budget": dict(self.budget),
             "block_pool": dict(self.block_pool),
+            "kv_cache": dict(self.kv_cache),
             "prefix_cache": dict(self.prefix_cache),
             "speculation": dict(self.speculation),
             "plan_cache": dict(self.plan_cache),

@@ -103,11 +103,16 @@ class SlotScheduler:
             need = self.pool.blocks_for(
                 request.prompt_len + request.budget(self.max_len))
             if need > self.pool.usable_blocks:
+                # byte-aware refusal: with KV quantization the same byte
+                # budget holds ~2x the blocks, so the bytes figure is the
+                # capacity knob an operator actually turns
+                cap = f"{self.pool.capacity_tokens()} tokens"
+                if self.pool.bytes_per_block is not None:
+                    cap += f", {self.pool.pool_bytes()} pool bytes"
                 raise ValueError(
                     f"prompt+budget needs {need} KV blocks but the pool has "
                     f"{self.pool.usable_blocks} usable "
-                    f"({self.pool.capacity_tokens()} tokens) — the request "
-                    f"could never be admitted")
+                    f"({cap}) — the request could never be admitted")
         request.arrival_tick = self.tick
         request.submitted_s = now_s
         self.queue.append(request)

@@ -221,6 +221,7 @@ def make_paged_engine_step(
     cfg: ModelConfig, mesh: Mesh, *, num_slots: int, max_len: int,
     kv_block_size: int, num_kv_blocks: int,
     chunk_buckets: tuple[int, ...], param_shapes=None, param_axes=None,
+    kv_dtype=None,
 ) -> PagedEngineArtifacts:
     """Step factory for the paged (block-table) serving engine.
 
@@ -231,6 +232,11 @@ def make_paged_engine_step(
     block table, so long prompts amortize over ticks instead of stalling
     the decode batch. Slot, chunk start, true length and the block-table
     row are all traced — admissions and chunk progress never recompile.
+
+    ``kv_dtype`` (:class:`repro.quant.KVCacheDtype` or name) selects the
+    pool's storage format; int8 adds the per-block scale leaves to the
+    state tree and switches every step function to the quantize-on-write
+    / dequant-in-gather graphs (``layers.attention``).
     """
     if cfg.family not in ("dense", "moe"):
         raise ValueError(
@@ -257,7 +263,8 @@ def make_paged_engine_step(
     state_shapes = jax.eval_shape(
         lambda: models.init_decode_state(
             cfg, num_slots, max_len, per_slot=True,
-            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks))
+            kv_block_size=kv_block_size, num_kv_blocks=num_kv_blocks,
+            kv_dtype=kv_dtype))
     max_blocks = state_shapes["kv"].table.shape[1]
     sspecs = shd.decode_state_specs(state_shapes, cfg, mesh, paged=True)
     sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,

@@ -51,6 +51,7 @@ GOLDEN = {
     # paged engines only
     "engine.kv_block_size": INT,
     "engine.num_kv_blocks": INT,
+    "engine.kv_dtype": STR,
     "engine.prefill_chunk": OPT_INT,
     "engine.chunk_buckets": LIST,
     "engine.prefix_cache": BOOL,
@@ -129,6 +130,25 @@ GOLDEN = {
     "block_pool.pool_tokens": INT,
     "block_pool.contiguous_tokens": INT,
     "block_pool.memory_ratio": NUM,
+    # byte accounting (pools constructed with bytes_per_block — all
+    # engine-owned pools; bare unit-test pools omit these keys)
+    "block_pool.bytes_per_block": INT,
+    "block_pool.pool_bytes": INT,
+    "block_pool.bytes_in_use": INT,
+    "block_pool.peak_bytes_in_use": INT,
+    # -------------------------------------------------------- kv cache
+    "kv_cache.kv_dtype": STR,
+    "kv_cache.quantized": BOOL,
+    "kv_cache.bytes_per_block": INT,
+    "kv_cache.pool_bytes": INT,
+    "kv_cache.bf16_pool_bytes": INT,
+    "kv_cache.bytes_ratio": NUM,
+    # dequant-error gauges (quantized pools only): worst-case block
+    # quantization error is scale/2
+    "kv_cache.scale_k_mean": NUM,
+    "kv_cache.scale_k_max": NUM,
+    "kv_cache.scale_v_mean": NUM,
+    "kv_cache.scale_v_max": NUM,
     # ---------------------------------------------------- prefix cache
     "prefix_cache.lookups": INT,
     "prefix_cache.lookup_tokens": INT,
@@ -177,7 +197,8 @@ GOLDEN = {
 }
 
 TOP_LEVEL = {"engine", "aggregate", "requests", "slo", "budget",
-             "block_pool", "prefix_cache", "speculation", "plan_cache"}
+             "block_pool", "kv_cache", "prefix_cache", "speculation",
+             "plan_cache"}
 
 
 def walk(node, prefix=""):
@@ -250,18 +271,23 @@ def test_metrics_schema_golden(dense_setup):
                     prompt_pad=8),
         _reqs([(8, 4), (4, 2), (6, 3)]))
     assert d["block_pool"] == {} and d["prefix_cache"] == {}
+    assert d["kv_cache"] == {}
     assert d["speculation"] == {"enabled": False}
     assert "timing" not in d
     seen |= check(d)
 
-    # 2. paged + prefix cache + budget target
+    # 2. paged + prefix cache + budget target + quantized KV pool
     d = _export(
         ServeEngine(cfg, mesh, params, num_slots=2, max_len=16,
                     prompt_pad=8, kv_block_size=4, num_kv_blocks=33,
                     prefix_cache=True, prefix_cache_blocks=8,
-                    prefill_chunk=4, ttft_target_ms=50.0),
+                    prefill_chunk=4, ttft_target_ms=50.0,
+                    kv_quantize="int8"),
         _reqs([(8, 4), (4, 2), (6, 3)]))
     assert d["engine"]["prefix_cache"] is True
+    assert d["engine"]["kv_dtype"] == "int8"
+    assert d["kv_cache"]["quantized"] is True
+    assert d["kv_cache"]["bytes_ratio"] < 1.0
     seen |= check(d)
 
     # 3. speculative decoding

@@ -370,3 +370,55 @@ def test_engine_rejects_prefix_cache_without_paging(dense_setup):
     with pytest.raises(ValueError):
         ServeEngine(cfg, mesh, params, num_slots=2, max_len=16,
                     prompt_pad=8, prefix_cache=True)
+
+
+def test_engine_prefix_cache_int8_shared_blocks_exact(dense_setup):
+    """Quantized prefix sharing is EXACT, not tolerance-gated: a trie hit
+    maps the same physical int8 blocks (and the same per-block scales)
+    into the new request's table, and a cache-miss request re-prefills
+    the header through the identical chunk sequence, so deterministic
+    quantization produces bit-identical pool state either way.  A hit
+    resumes prefill at a whole-block boundary, so the dequant-merge-
+    requantize write path never touches a shared block."""
+    cfg, mesh, params = dense_setup
+    kw = dict(num_slots=2, max_len=40, prompt_pad=16, kv_block_size=4,
+              num_kv_blocks=40, prefill_chunk=8, kv_quantize="int8")
+    off, m_off, _ = _run_shared_trace(cfg, mesh, params, prefix=False, **kw)
+    on, m_on, _ = _run_shared_trace(cfg, mesh, params, prefix=True, **kw)
+    assert on == off
+    px = m_on.prefix_cache
+    assert px["hit_tokens"] > 0 and px["hit_rate"] > 0.5
+    assert px["inserted_blocks"] > 0
+    assert m_on.plan_cache["steady_state"] is True
+    assert m_on.kv_cache["kv_dtype"] == "int8"
+    assert m_on.kv_cache["bytes_ratio"] < 0.55
+    cached = [r["cached_tokens"] for r in m_on.requests]
+    assert sum(1 for c in cached if c > 0) >= 2
+    assert all(c % 4 == 0 for c in cached)   # whole blocks only
+
+
+def test_engine_prefix_cache_int8_incref_reclaim_under_pressure(dense_setup):
+    """Ref-counted quantized blocks survive the reclaim path: cached-idle
+    int8 blocks are reclaimed for later admissions under pool pressure
+    while another request is mid-decode, and every request still produces
+    its cache-off tokens — scale slots are recalibrated on reuse, never
+    leaked from the evicted block."""
+    cfg, mesh, params = dense_setup
+    spec = [(8, 2), (8, 6), (8, 2), (8, 2)]  # distinct prompts, no sharing
+    kw = dict(num_slots=2, max_len=20, prompt_pad=8, kv_block_size=4,
+              num_kv_blocks=9, prefill_chunk=8, kv_quantize="int8")
+
+    def run(prefix):
+        with use_context(plan_cache=PlanCache()):
+            e = ServeEngine(cfg, mesh, params, prefix_cache=prefix, **kw)
+            e.plan_warmup()
+            m = e.run(_requests(spec))
+        return ({st.request.prompt.tobytes(): st.tokens
+                 for st in e.finished}, m)
+
+    off, _ = run(False)
+    on, m = run(True)
+    assert on == off
+    assert m.prefix_cache["reclaimed_blocks"] > 0   # pressure actually hit
+    assert m.plan_cache["steady_state"] is True
+    assert m.kv_cache["quantized"] is True

@@ -12,8 +12,9 @@ from repro.layers import common as cm
 from repro.layers import mlp as M
 from repro.layers import quantized as Q
 from repro.quant import (
-    QMAX, Calibrator, absmax_scale, combine_scales, dequantize, quantize,
-    quantize_per_channel, quantize_per_tensor,
+    QMAX, Calibrator, absmax_scale, combine_scales, dequantize,
+    dequantize_block, quantize, quantize_block, quantize_per_channel,
+    quantize_per_tensor,
 )
 
 RNG = np.random.default_rng(42)
@@ -393,3 +394,101 @@ def test_prequant_rwkv_mamba_numerics_close_to_float(arch):
         d1, _ = models.decode_step(qp, t, cfg, s1)
         assert float(jnp.abs(d0 - d1).max() /
                      (jnp.abs(d0).max() + 1e-9)) < 0.2
+
+
+# ---------------------------------------------------------------- KV blocks
+
+def test_absmax_scale_zero_input_is_unit_scale():
+    # The reserved null block and freshly-allocated pool blocks are all
+    # zeros; their scale must be exactly 1.0, never eps/127.
+    z = jnp.zeros((4, 8))
+    s = absmax_scale(z)
+    assert float(s) == 1.0
+    q = quantize(z, s)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(dequantize(q, s)), 0.0)
+
+
+def test_absmax_scale_zero_rows_mixed_with_live_rows():
+    x = jnp.stack([jnp.zeros((16,)), jnp.full((16,), 2.54)])
+    s = absmax_scale(x, axis=0)
+    assert float(s[0]) == 1.0
+    np.testing.assert_allclose(float(s[1]), 2.54 / QMAX, rtol=1e-6)
+    back = dequantize(quantize(x, s, axis=0), s, axis=0)
+    np.testing.assert_array_equal(np.asarray(back[0]), 0.0)
+    np.testing.assert_allclose(np.asarray(back[1]), 2.54, rtol=1e-2)
+
+
+def test_dequantize_zero_scale_guard_is_finite():
+    # A zero scale (however it was produced) must act like 1.0, not
+    # divide-by-zero on the quantize side or collapse on dequantize.
+    x = _randf((8, 4))
+    q = quantize(x, jnp.asarray(0.0))
+    assert np.isfinite(np.asarray(q, np.float32)).all()
+    back = dequantize(q, jnp.asarray(0.0))
+    assert np.isfinite(np.asarray(back)).all()
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q, np.float32))
+
+
+@pytest.mark.parametrize("bs", [1, 4, 8, 16])
+def test_quantize_block_roundtrip_error_bound(bs):
+    # (blocks, block_size, Hkv, Dh) — the paged KV pool layout per layer.
+    x = jnp.asarray(RNG.normal(size=(5, bs, 3, 8)) * 3.0, jnp.float32)
+    q, s = quantize_block(x)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    assert s.shape == (5, 3) and s.dtype == jnp.float32
+    # scale is per-(block, head) absmax / QMAX
+    amax = np.abs(np.asarray(x)).max(axis=(1, 3))
+    np.testing.assert_allclose(np.asarray(s), amax / QMAX, rtol=1e-6)
+    # symmetric rounding: reconstruction error <= scale/2 everywhere
+    back = np.asarray(dequantize_block(q, s))
+    err = np.abs(back - np.asarray(x))
+    bound = np.asarray(s)[:, None, :, None] / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+def test_quantize_block_zero_block_is_exact():
+    z = jnp.zeros((2, 4, 3, 8))
+    q, s = quantize_block(z)
+    np.testing.assert_array_equal(np.asarray(s), 1.0)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(dequantize_block(q, s)), 0.0)
+
+
+def test_quantize_block_zero_head_among_live_heads():
+    x = np.asarray(RNG.normal(size=(1, 4, 3, 8)), np.float32)
+    x[:, :, 1, :] = 0.0
+    q, s = quantize_block(jnp.asarray(x))
+    assert float(s[0, 1]) == 1.0
+    back = np.asarray(dequantize_block(q, s))
+    np.testing.assert_array_equal(back[:, :, 1, :], 0.0)
+    live = np.abs(back - x)[:, :, (0, 2), :]
+    assert (live <= np.asarray(s)[0, (0, 2)].max() / 2 + 1e-7).all()
+
+
+def test_dequantize_block_dtype_roundtrip():
+    x = jnp.asarray(RNG.normal(size=(2, 4, 2, 8)), jnp.float32)
+    q, s = quantize_block(x)
+    back = dequantize_block(q, s, jnp.bfloat16)
+    assert back.dtype == jnp.bfloat16
+
+
+def test_kv_bytes_per_token_quantized_accounting():
+    # bf16: 2 (K and V) * Hkv * Dh * 2 bytes per layer
+    bf = balance.kv_bytes_per_token(4, 32, n_layers=3)
+    assert bf == 2 * 4 * 32 * 2 * 3
+    # int8 halves the payload and amortizes 2*4*Hkv scale bytes per block
+    q = balance.kv_bytes_per_token(4, 32, kv_dtype="int8", n_layers=3,
+                                   block_size=16)
+    assert q == 2 * 4 * 32 * 1 * 3 + 3 * (2 * 4 * 4) / 16
+    assert q / bf < 0.55
+    with pytest.raises(ValueError, match="block_size"):
+        balance.kv_bytes_per_token(4, 32, kv_dtype="int8")
+    # the decode-traffic estimate scales linearly in context
+    t1 = balance.decode_kv_traffic(1024, 4, 32, kv_dtype="int8",
+                                   n_layers=3, block_size=16)
+    t2 = balance.decode_kv_traffic(2048, 4, 32, kv_dtype="int8",
+                                   n_layers=3, block_size=16)
+    assert t1.bytes_per_token == q
+    assert t2.read_bytes == 2 * t1.read_bytes
+    assert t2.t_mem > t1.t_mem > 0

@@ -203,3 +203,42 @@ def test_spec_engine_rejects_incompatible_configs(spec_setup):
             ServeEngine(cfg, mesh, params, num_slots=2, max_len=32,
                         prompt_pad=8, kv_block_size=8, spec_draft_cfg=cfg,
                         spec_draft_params=params, temperature=0.8)
+
+
+def test_spec_engine_int8_kv_verify_path_parity(spec_setup):
+    """Speculation over the quantized pool: the verify pass gathers int8
+    blocks through the same dequantizing table walk as decode, and its
+    K+1-token commit writes requantize whole blocks at once (plain decode
+    requantizes one token at a time).  Committed tokens are still the
+    target's own greedy choices under its quantized cache, so the
+    spec-int8 engine must track the plain-int8 engine; the requant
+    histories differ, so near-tie forks are tolerated by a pinned
+    fraction (measured: 34/34 positions, 5/5 streams identical)."""
+    cfg, mesh, params = spec_setup
+    common = dict(_spec_common(), kv_quantize="int8")
+    with use_context(plan_cache=PlanCache(path=None)):
+        base = ServeEngine(cfg, mesh, params, **common)
+        base.plan_warmup()
+        base.run(_spec_trace(cfg))
+        expect = {st.request.prompt.tobytes(): st.tokens
+                  for st in base.finished}
+
+        eng = ServeEngine(cfg, mesh, params, spec_draft_cfg=cfg,
+                          spec_draft_params=params, spec_k=3, **common)
+        eng.plan_warmup()
+        m = eng.run(_spec_trace(cfg))
+        got = {st.request.prompt.tobytes(): st.tokens
+               for st in eng.finished}
+    assert sorted(got) == sorted(expect)
+    total = sum(len(t) for t in expect.values())
+    match = sum(a == b for k in expect for a, b in zip(expect[k], got[k]))
+    assert match / total >= 0.9, f"{match}/{total} positions matched"
+    exact = sum(expect[k] == got[k] for k in expect)
+    assert exact >= len(expect) - 1, f"{exact}/{len(expect)} streams exact"
+    sp = m.speculation
+    assert sp["enabled"] and sp["acceptance_rate"] > 0.5
+    assert m.plan_cache["steady_state"]
+    assert m.plan_cache["lazy_solves"] == 0
+    # the target pool really is quantized; the draft cache stays dense
+    assert m.kv_cache["kv_dtype"] == "int8"
+    assert m.kv_cache["bytes_ratio"] < 0.55
