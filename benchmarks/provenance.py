@@ -6,8 +6,14 @@ the harness and standalone benchmarks embed verbatim. Keys:
 
 * ``git_sha``    — ``git rev-parse HEAD`` (+ ``-dirty`` when the tree has
                    uncommitted changes); ``None`` outside a work tree.
+* ``dirty``      — the same worktree-dirty signal as a machine-readable
+                   boolean (``None`` outside a work tree), so tooling
+                   filters unreproducible artifacts without parsing shas.
 * ``hw``         — active hardware generation name (perf-model target).
 * ``backend``    — active matmul backend (xla / pallas / reference).
+* ``jax`` / ``jaxlib`` — installed version strings (``None`` when not
+                   importable): two artifacts with the same sha but
+                   different jaxlib are not the same measurement.
 * ``timestamp``  — UTC ISO-8601 at stamp time.
 """
 from __future__ import annotations
@@ -20,21 +26,31 @@ from typing import Any
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _git_sha() -> str | None:
+def _git_state() -> tuple[str | None, bool | None]:
+    """(sha with legacy ``-dirty`` suffix, dirty flag) — (None, None)
+    outside a work tree."""
     try:
         out = subprocess.run(
             ["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT,
             capture_output=True, text=True, timeout=10)
         if out.returncode != 0:
-            return None
+            return None, None
         sha = out.stdout.strip()
-        dirty = subprocess.run(
+        st = subprocess.run(
             ["git", "status", "--porcelain"], cwd=_REPO_ROOT,
             capture_output=True, text=True, timeout=10)
-        if dirty.returncode == 0 and dirty.stdout.strip():
-            sha += "-dirty"
-        return sha
+        dirty = bool(st.returncode == 0 and st.stdout.strip())
+        return (sha + "-dirty" if dirty else sha), dirty
     except (OSError, subprocess.TimeoutExpired):
+        return None, None
+
+
+def _version_of(module: str) -> str | None:
+    try:
+        import importlib
+
+        return getattr(importlib.import_module(module), "__version__", None)
+    except Exception:
         return None
 
 
@@ -51,10 +67,14 @@ def stamp(hw: str | None = None, backend: str | None = None,
                        else ctx.matmul_backend)
         except Exception:
             pass
+    sha, dirty = _git_state()
     return {
-        "git_sha": _git_sha(),
+        "git_sha": sha,
+        "dirty": dirty,
         "hw": hw,
         "backend": backend,
+        "jax": _version_of("jax"),
+        "jaxlib": _version_of("jaxlib"),
         "timestamp": datetime.datetime.now(
             datetime.timezone.utc).isoformat(timespec="seconds"),
     }

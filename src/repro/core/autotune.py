@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core import balance, perfmodel as pm
 from repro.core.context import resolve_hw
+from repro.core.plancache import BalanceSnapshot
 from repro.kernels.matmul import LANE, SUBLANE, vmem_bytes
 from repro.kernels.ops import GemmPlan, balanced_matmul
 
@@ -97,6 +98,7 @@ def refine_cached_plans(
     backend: str = "interpret",
     repeats: int = 2,
     rounds: int = 1,
+    resolve: bool = False,
 ) -> dict[str, int]:
     """Refine cached plans in place with measured feedback (ROADMAP item).
 
@@ -112,6 +114,14 @@ def refine_cached_plans(
     :func:`wallclock_measure_fn` on ``backend`` (the real kernel on TPU,
     interpret mode elsewhere). Entries whose key is missing from the cache
     are skipped — refinement never *adds* signatures.
+
+    ``resolve=True`` is the balance auditor's re-solve path: each key is
+    first re-solved from the analytic model (``solve_exhaustive``, direct —
+    no cache counters touched) and the fresh plan competes with the cached
+    one as the hillclimb start. Either way the entry's
+    :class:`~repro.core.plancache.BalanceSnapshot` is refreshed to the
+    winning plan's current model evaluation, so a refined signature stops
+    reading as drifted.
     """
     if measure_factory is None:
         def measure_factory(M, K, N, **kw):
@@ -133,6 +143,15 @@ def refine_cached_plans(
         hw = resolve_hw(_hw)
         best_plan, best_t = plan, fn(plan)
         stats["measured"] += 1
+        if resolve:
+            fresh = balance.solve_exhaustive(
+                M, K, N, hw=hw, in_dtype=jnp.dtype(in_dtype),
+                out_dtype=jnp.dtype(out_dtype), b_layout=b_layout).plan
+            if fresh != plan:
+                t = fn(fresh)
+                stats["measured"] += 1
+                if t < best_t:
+                    best_plan, best_t = fresh, t
         for _ in range(max(1, rounds)):
             improved = False
             for cand in _neighbors(best_plan, ty):
@@ -145,8 +164,13 @@ def refine_cached_plans(
                     best_plan, best_t, improved = cand, t, True
             if not improved:
                 break
+        est = pm.estimate_gemm(
+            hw, M, K, N, best_plan.bm, best_plan.bk, best_plan.bn,
+            in_dtype=jnp.dtype(in_dtype), out_dtype=jnp.dtype(out_dtype),
+            b_layout=b_layout)
+        cache.update(key, best_plan, balance=BalanceSnapshot(
+            t_comp=est.t_comp, t_mem=est.t_mem))
         if best_plan is not plan:
-            cache.entries[key] = best_plan
             stats["refined"] += 1
         else:
             stats["kept"] += 1

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import balance, perfmodel as pm
 from repro.core.context import current_context, resolve_hw
-from repro.core.plancache import PlanCache, plan_key
+from repro.core.plancache import BalanceSnapshot, PlanCache, plan_key
 from repro.kernels import ops
 from repro.kernels.ops import GemmPlan
 
@@ -36,6 +36,25 @@ from repro.kernels.ops import GemmPlan
 # amortize weight streaming and the x-stationary GEMV kernel wins (§5.3.4
 # extension). 128 covers the paper's decode batches (1–128 tokens).
 SKINNY_M = 128
+
+# Observers of plan *consultation* — distinct from the plan cache's solver
+# listeners (miss/warm_solve/lazy_solve): these fire on every ``plan_for``
+# resolution, hit or miss, so an attribution ledger can count how many times
+# each GEMM signature is dispatched per phase. fn(key, plan) with plan
+# possibly None (cache-only consult that missed).
+_dispatch_listeners: list = []
+
+
+def add_dispatch_listener(fn) -> None:
+    """Register ``fn(key, plan)`` called on every plan_for consultation."""
+    _dispatch_listeners.append(fn)
+
+
+def remove_dispatch_listener(fn) -> None:
+    try:
+        _dispatch_listeners.remove(fn)
+    except ValueError:
+        pass
 
 
 def plan_for(
@@ -67,11 +86,18 @@ def plan_for(
     if plan is None and (solve or cache.warming):
         # exhaustive model sweep (beyond-paper; free without per-probe
         # hardware compiles) — the paper's walk is kept for benchmarks
-        plan = balance.solve_exhaustive(
+        res = balance.solve_exhaustive(
             M, K, N, hw=hw, in_dtype=in_dtype, out_dtype=out_dtype,
             b_layout=b_layout,
-        ).plan
-        cache.put(key, plan)
+        )
+        plan = res.plan
+        step = res.chosen_step
+        cache.put(key, plan,
+                  balance=None if step is None else BalanceSnapshot(
+                      t_comp=step.t_comp, t_mem=step.t_mem))
+    if _dispatch_listeners:
+        for fn in _dispatch_listeners:
+            fn(key, plan)
     return plan
 
 

@@ -23,9 +23,34 @@ from repro.kernels.ops import GemmPlan
 
 # Bump whenever the key schema, plan schema, or solver semantics change in a
 # way that invalidates previously persisted plans.
-PLAN_CACHE_VERSION = 1
+# v2: entries carry the solver's balance snapshot (modeled t_comp/t_mem at
+# solve time) so the attribution auditor can detect drift after restarts.
+PLAN_CACHE_VERSION = 2
 
 PlanKey = tuple  # (hw, M, K, N, in_dtype, out_dtype, b_layout)
+
+
+@dataclasses.dataclass(frozen=True)
+class BalanceSnapshot:
+    """Modeled compute/memory seconds of a plan at the moment it was solved.
+
+    The auditor compares the *current* model evaluation of a cached plan
+    against this snapshot: a deviation beyond tolerance means the stored
+    plan no longer sits where the solver put it (perturbed entry, stale
+    disk cache across a model/solver change) and is a re-solve candidate.
+    """
+
+    t_comp: float
+    t_mem: float
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_comp, self.t_mem)
+
+    @property
+    def ratio(self) -> float | None:
+        """Balance ratio t_comp/t_mem; None when the memory side is zero."""
+        return None if self.t_mem <= 0 else self.t_comp / self.t_mem
 
 
 def plan_key(
@@ -85,6 +110,9 @@ class PlanCache:
     def __init__(self, path: str | None = None):
         self.path = path
         self.entries: dict[PlanKey, GemmPlan] = {}
+        # solve-time model evaluation per entry (may lag `entries` when a
+        # cache is hand-perturbed — exactly what the auditor detects)
+        self.balance: dict[PlanKey, BalanceSnapshot] = {}
         self.stats = PlanCacheStats()
         self._warming = 0
         # distinct keys consulted during the current/most recent warm-up
@@ -121,8 +149,11 @@ class PlanCache:
             self.warm_keys.add(key)
         return plan
 
-    def put(self, key: PlanKey, plan: GemmPlan) -> GemmPlan:
+    def put(self, key: PlanKey, plan: GemmPlan,
+            balance: BalanceSnapshot | None = None) -> GemmPlan:
         self.entries[key] = plan
+        if balance is not None:
+            self.balance[key] = balance
         if self._warming:
             self.stats.warm_solves += 1
         else:
@@ -132,11 +163,24 @@ class PlanCache:
                          key)
         return plan
 
+    def update(self, key: PlanKey, plan: GemmPlan,
+               balance: BalanceSnapshot | None = None) -> GemmPlan:
+        """Replace an entry in place (autotune refinement / drift re-solve)
+        without touching the warm/lazy solver counters — a refined plan is
+        maintenance, not a cache miss."""
+        self.entries[key] = plan
+        if balance is not None:
+            self.balance[key] = balance
+        else:
+            self.balance.pop(key, None)
+        return plan
+
     def __len__(self) -> int:
         return len(self.entries)
 
     def clear(self) -> None:
         self.entries.clear()
+        self.balance.clear()
         self.stats = PlanCacheStats()
 
     @contextlib.contextmanager
@@ -205,6 +249,12 @@ class PlanCache:
                 continue  # a hand-edited/corrupt plan would crash the kernel
             if key not in self.entries:
                 self.entries[key] = plan
+                try:
+                    self.balance[key] = BalanceSnapshot(
+                        t_comp=float(rec["t_comp"]),
+                        t_mem=float(rec["t_mem"]))
+                except (KeyError, TypeError, ValueError):
+                    pass  # snapshot-less entries stay auditable-as-unknown
                 n += 1
         self.stats.loaded += n
         return n
@@ -214,10 +264,18 @@ class PlanCache:
         path = path or self.path
         if not path:
             return None
+        def _rec(k: PlanKey, p: GemmPlan) -> dict:
+            rec: dict = {"bm": p.bm, "bk": p.bk, "bn": p.bn}
+            snap = self.balance.get(k)
+            if snap is not None:
+                rec["t_comp"] = snap.t_comp
+                rec["t_mem"] = snap.t_mem
+            return rec
+
         payload = {
             "version": PLAN_CACHE_VERSION,
             "plans": {
-                _key_str(k): {"bm": p.bm, "bk": p.bk, "bn": p.bn}
+                _key_str(k): _rec(k, p)
                 for k, p in sorted(self.entries.items(),
                                    key=lambda kv: _key_str(kv[0]))
             },

@@ -179,6 +179,18 @@ def add_serve_engine_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParse
         "--measure-plans", action="store_true",
         help="refine warm-up plans in place with wall-clock measurement "
              "(core.autotune) and persist the refined plans")
+    g.add_argument(
+        "--attrib-tol", type=float, default=0.25, metavar="F",
+        help="balance-auditor drift tolerance: a cached plan whose "
+             "current model evaluation deviates from its solve-time "
+             "snapshot by more than F (relative t_total or balance "
+             "ratio) is flagged drifted (default 0.25)")
+    g.add_argument(
+        "--rebalance-drifted", action="store_true",
+        help="after a traced run, feed the warm plans the balance "
+             "auditor flagged as drifted into autotune.refine_cached_"
+             "plans(resolve=True) — model re-solve + hillclimb — and "
+             "persist the restored plans (needs --trace-out)")
     return ap
 
 

@@ -126,6 +126,60 @@ def _measure_plans(ctx, args) -> None:
           + (f", persisted to {saved}" if saved else ""))
 
 
+def _report_attrib(ctx, engine, m, *, rebalance: bool) -> None:
+    """Print the balance auditor's verdict and, with --rebalance-drifted,
+    feed the drifted warm plans through a model re-solve + hillclimb.
+
+    The metrics JSON keeps the *audited* (pre-rebalance) attribution: the
+    re-solve restores the cache for the next run, it does not rewrite the
+    evidence that triggered it.
+    """
+    a = m.attribution
+    if not a:
+        return
+    recon = a.get("reconciliation_error")
+    print(f"[attrib] {a['signatures']} signatures: attributed "
+          f"{a['attributed_device_s']:.3f}s of {a['traced_device_s']:.3f}s "
+          f"traced GEMM-phase device time (recon err "
+          + (f"{recon:.3f}" if recon is not None else "n/a")
+          + f"), bound shares "
+          + ", ".join(f"{k}={v:.2f}" if v is not None else f"{k}=n/a"
+                      for k, v in sorted(a["bound_share"].items()))
+          + f", drifted={a['drifted_count']}")
+    rows = a.get("by_device_s") or []
+    if rows:
+        top = rows[0]
+        print(f"[attrib] top signature {top['key']}: "
+              f"{top['device_s']:.3f}s ({top['share']:.2f} share, "
+              f"{top['calls']} calls, bound={top['bound']})")
+    for k in a.get("drifted", []):
+        row = next((r for r in rows if r["key"] == k), None)
+        sug = ""
+        if row is not None and row.get("suggested_bm") is not None:
+            sug = (f" -> suggest bm={row['suggested_bm']} "
+                   f"bk={row['suggested_bk']} bn={row['suggested_bn']} "
+                   f"(x{row['suggested_gain']:.2f} modeled)")
+        print(f"[attrib] drifted: {k}{sug}")
+    if not rebalance:
+        return
+    keys = engine.attrib.drifted_keys()
+    if not keys:
+        print("[attrib] rebalance: no drifted warm plans, nothing to do")
+        return
+    from repro.core.autotune import model_measure_fn, refine_cached_plans
+
+    t0 = time.perf_counter()
+    stats = refine_cached_plans(
+        ctx.plan_cache, keys=keys, resolve=True,
+        measure_factory=lambda M, K, N, **kw: model_measure_fn(
+            M, K, N, hw=ctx.hw, **kw))
+    saved = ctx.plan_cache.save()
+    print(f"[attrib] rebalanced {len(keys)} drifted plans in "
+          f"{time.perf_counter()-t0:.2f}s: {stats['refined']} refined, "
+          f"{stats['kept']} kept"
+          + (f", persisted to {saved}" if saved else ""))
+
+
 def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
     """--engine: continuous batching over a mixed-length synthetic trace
     (with --prefix-cache: a shared-header trace, so the radix cache has
@@ -223,6 +277,7 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
         clock=(SimClock(args.sim_clock) if args.sim_clock else None),
         tracer=tracer,
         metrics_interval_ticks=args.metrics_interval_ticks,
+        attrib_tol=args.attrib_tol,
         **spec_kwargs)
     if not args.no_warmup:
         t0 = time.perf_counter()
@@ -313,6 +368,10 @@ def _run_engine(args, ctx, cfg, mesh, params, param_axes) -> None:
               f"host {t.get('host_s', 0.0):.3f}s / device "
               f"{t.get('device_s', 0.0):.3f}s across "
               f"{len(t.get('phases', {}))} phases")
+        _report_attrib(ctx, engine, m, rebalance=args.rebalance_drifted)
+    elif args.rebalance_drifted:
+        raise SystemExit("--rebalance-drifted needs the balance auditor's "
+                         "traced attribution: pass --trace-out too")
     if args.metrics_json:
         m.to_json(args.metrics_json)
         print(f"[engine] metrics written to {args.metrics_json}")

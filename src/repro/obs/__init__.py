@@ -13,12 +13,18 @@ Two complementary instruments (docs/observability.md):
   text exposition and periodic snapshots, onto which the engine's
   subsystem counters (block pool, prefix cache, plan cache, SpecStats,
   budget controller) are published.
+* ``attrib`` — the balance auditor: a per-signature GEMM attribution
+  ledger joining traced phase seconds against the analytic balance
+  model (compute-/memory-bound vs drifted plans; metrics.json
+  ``attribution`` section, ``repro_attrib_*`` gauges, re-solve
+  candidates for ``--rebalance-drifted``).
 
 Both are off by default: the engine holds the ``NULL_TRACER`` singleton
 whose methods are no-ops and never read a clock, so an untraced run is
 bit-identical (output *and* metrics JSON) to a build without this
 package.
 """
+from repro.obs.attrib import GEMM_PHASES, AttributionLedger
 from repro.obs.registry import (Counter, Gauge, Histogram, Registry,
                                 prom_name)
 from repro.obs.trace import (NULL_TRACER, PHASES, NullTracer, Tracer,
@@ -28,4 +34,5 @@ __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "PHASES",
     "validate_chrome_trace",
     "Registry", "Counter", "Gauge", "Histogram", "prom_name",
+    "AttributionLedger", "GEMM_PHASES",
 ]

@@ -98,13 +98,25 @@ class Histogram:
                 return
         self.counts[-1] += 1
 
-    def collect(self) -> dict:
+    def cumulative(self) -> list[tuple[str, int]]:
+        """Cumulative ``(le_label, count)`` pairs ending with ``+Inf``.
+
+        The single source of bucket truth for both the text exposition
+        and JSON snapshots — Prometheus histogram buckets are cumulative
+        (each ``le`` counts every observation ≤ its edge) and the
+        ``+Inf`` bucket must equal ``count``.
+        """
+        out = []
         cum = 0
-        by_edge = {}
         for edge, c in zip(self.buckets, self.counts):
             cum += c
-            by_edge[edge] = cum
-        return {"buckets": by_edge, "sum": self.sum, "count": self.count}
+            out.append((f"{edge:g}", cum))
+        out.append(("+Inf", self.count))
+        return out
+
+    def collect(self) -> dict:
+        return {"buckets": dict(self.cumulative()),
+                "sum": self.sum, "count": self.count}
 
 
 class Registry:
@@ -161,29 +173,42 @@ class Registry:
         return {name: m.collect() for name, m in sorted(self._metrics.items())}
 
     def snapshot(self, tick: int | None = None) -> dict:
-        """Append and return a point-in-time copy of all scalar metrics."""
+        """Append and return a point-in-time copy of all metrics.
+
+        Histograms keep their full cumulative bucket vector (JSON-friendly
+        string ``le`` labels) rather than collapsing to a bare sum/count
+        pair — a snapshot must round-trip to the same distribution a
+        scraper would see in the text exposition.
+        """
         snap = {"tick": tick}
         for name, m in sorted(self._metrics.items()):
             if m.kind == "histogram":
-                snap[name] = {"sum": m.sum, "count": m.count}
+                snap[name] = {"sum": m.sum, "count": m.count,
+                              "buckets": dict(m.cumulative())}
             else:
                 snap[name] = m.value
         self.snapshots.append(snap)
         return snap
 
     def to_prometheus_text(self) -> str:
-        """Render all metrics in the Prometheus text exposition format."""
+        """Render all metrics in the Prometheus text exposition format.
+
+        Histograms emit the full cumulative series — one
+        ``_bucket{le="..."}`` line per edge plus ``+Inf``, ``_sum`` and
+        ``_count`` — which is what scrapers require (a collapsed single
+        value is rejected as a malformed histogram).
+        """
+        def esc(s: str) -> str:
+            return s.replace("\\", r"\\").replace("\n", r"\n")
+
         lines = []
         for name, m in sorted(self._metrics.items()):
             if m.help:
-                lines.append(f"# HELP {name} {m.help}")
+                lines.append(f"# HELP {name} {esc(m.help)}")
             lines.append(f"# TYPE {name} {m.kind}")
             if m.kind == "histogram":
-                cum = 0
-                for edge, c in zip(m.buckets, m.counts):
-                    cum += c
-                    lines.append(f'{name}_bucket{{le="{edge:g}"}} {cum}')
-                lines.append(f'{name}_bucket{{le="+Inf"}} {m.count}')
+                for le, cum in m.cumulative():
+                    lines.append(f'{name}_bucket{{le="{le}"}} {cum}')
                 lines.append(f"{name}_sum {m.sum:g}")
                 lines.append(f"{name}_count {m.count}")
             else:

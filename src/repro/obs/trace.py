@@ -168,6 +168,19 @@ class Tracer:
             "args": args or None,
         })
 
+    def counter(self, name: str, values: dict) -> None:
+        """Record a counter-track sample (Perfetto/Chrome "C" event).
+
+        ``values`` maps series name -> number; successive samples of the
+        same ``name`` render as stacked counter tracks (e.g. attributed
+        device seconds by bound class, pool blocks in use).
+        """
+        self._push({
+            "kind": "counter", "name": name, "tick": self._tick,
+            "slot": None, "ts": self._clock() - self._t0,
+            "args": {k: float(v) for k, v in values.items()},
+        })
+
     def request_event(self, event: str, request_id, **args) -> None:
         """Record one lifecycle event for ``request_id``.
 
@@ -290,6 +303,15 @@ class Tracer:
                     "s": "t", "ts": rec["ts"] * _US,
                     "pid": _PID_PHASES, "tid": 0, "args": args,
                 })
+            elif rec["kind"] == "counter":
+                # counter args must stay numeric series values — no tick
+                tids_seen.add(0)
+                out.append({
+                    "name": rec["name"], "cat": "counter", "ph": "C",
+                    "ts": rec["ts"] * _US,
+                    "pid": _PID_PHASES, "tid": 0,
+                    "args": dict(rec.get("args") or {}),
+                })
             else:  # request lifecycle
                 event, req, ts = rec["event"], rec["req"], rec["ts"]
                 if event == "submit":
@@ -387,6 +409,9 @@ class NullTracer:
     def instant(self, name: str, **args) -> None:
         pass
 
+    def counter(self, name: str, values: dict) -> None:
+        pass
+
     def request_event(self, event: str, request_id, **args) -> None:
         pass
 
@@ -418,6 +443,7 @@ def validate_chrome_trace(obj, require_phases=(), min_requests: int = 0,
     async_depth: dict[tuple, int] = {}
     completed_requests: set = set()
     preempts = 0
+    counter_samples = 0
     for i, ev in enumerate(obj["traceEvents"]):
         if not isinstance(ev, dict):
             raise ValueError(f"event {i} is not an object")
@@ -428,7 +454,15 @@ def validate_chrome_trace(obj, require_phases=(), min_requests: int = 0,
             continue
         if not isinstance(ev.get("ts"), (int, float)):
             raise ValueError(f"event {i} ({ev['name']!r}) missing numeric ts")
-        if ph == "X":
+        if ph == "C":
+            vals = ev.get("args")
+            if not isinstance(vals, dict) or not all(
+                    isinstance(v, (int, float)) for v in vals.values()):
+                raise ValueError(
+                    f"counter event {i} ({ev['name']!r}) args must be "
+                    f"numeric series values: {vals!r}")
+            counter_samples += 1
+        elif ph == "X":
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 raise ValueError(f"event {i} ({ev['name']!r}) bad dur: {dur!r}")
@@ -471,4 +505,5 @@ def validate_chrome_trace(obj, require_phases=(), min_requests: int = 0,
         "phase_spans": phase_spans,
         "completed_requests": len(completed_requests),
         "preempts": preempts,
+        "counter_samples": counter_samples,
     }

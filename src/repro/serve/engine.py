@@ -59,6 +59,7 @@ import numpy as np
 from repro import models
 from repro.configs.base import ModelConfig
 from repro.core.context import current_context
+from repro.obs.attrib import AttributionLedger
 from repro.obs.registry import Registry, prom_name
 from repro.obs.trace import NULL_TRACER
 from repro.quant.kvcache import KVCacheDtype, kv_block_bytes
@@ -116,6 +117,7 @@ class ServeEngine:
         tracer=None,
         registry: Registry | None = None,
         metrics_interval_ticks: int | None = None,
+        attrib_tol: float = 0.25,
     ):
         self.cfg = cfg
         self.mesh = mesh
@@ -141,6 +143,11 @@ class ServeEngine:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.registry = registry if registry is not None else Registry()
         self.metrics_interval_ticks = metrics_interval_ticks
+        # balance auditor: phase→signature profiles are captured during
+        # plan_warmup; runtime dispatch counting is a plain int add (no
+        # clock reads), and the join against traced phase seconds happens
+        # once at end of run — only when a real tracer is attached
+        self.attrib = AttributionLedger(tol=attrib_tol)
         self.paged = bool(kv_block_size)
         self.kv_dtype = KVCacheDtype.parse(kv_quantize)
         if self.kv_dtype.quantized and not self.paged:
@@ -253,6 +260,7 @@ class ServeEngine:
         benchmark times a second run to measure steady state, not XLA)."""
         ctx = current_context()
         self.tracer.reset()
+        self.attrib.reset_run()
         # the engine's time base: every stamp (submit, admission, TTFT,
         # deadlines, trace arrival_s) is seconds since this reset, so
         # absolute deadline_s/arrival_s values in a trace mean what they
@@ -333,21 +341,29 @@ class ServeEngine:
         scalar = jax.ShapeDtypeStruct((), jnp.int32)
         toks = jax.ShapeDtypeStruct((self.num_slots, 1), jnp.int32)
         active = jax.ShapeDtypeStruct((self.num_slots,), jnp.int32)
+        # each abstract trace runs under an attribution capture: the
+        # ledger records which GEMM signatures one execution of that phase
+        # function consults (and how often) — the phase→signature profile
+        # the balance auditor joins against traced phase seconds
         with cache.warmup():
             if self.paged:
                 blocks = jax.ShapeDtypeStruct((self.art.max_blocks,),
                                               jnp.int32)
                 for bucket in self.chunk_buckets:
                     chunk = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
-                    jax.eval_shape(self.art.prefill_raw, self.params,
-                                   self.art.state_shapes, chunk, scalar,
-                                   scalar, scalar, blocks)
+                    with self.attrib.capture(f"prefill-chunk@{bucket}"):
+                        jax.eval_shape(self.art.prefill_raw, self.params,
+                                       self.art.state_shapes, chunk, scalar,
+                                       scalar, scalar, blocks)
             else:
                 prompt = jax.ShapeDtypeStruct((1, self.prompt_pad), jnp.int32)
-                jax.eval_shape(self.art.admit_raw, self.params,
-                               self.art.state_shapes, prompt, scalar, scalar)
-            jax.eval_shape(self.art.decode_raw, self.params,
-                           self.art.state_shapes, toks, active)
+                with self.attrib.capture("admit"):
+                    jax.eval_shape(self.art.admit_raw, self.params,
+                                   self.art.state_shapes, prompt, scalar,
+                                   scalar)
+            with self.attrib.capture("decode"):
+                jax.eval_shape(self.art.decode_raw, self.params,
+                               self.art.state_shapes, toks, active)
             if self.spec:
                 # the draft is a second GemmContext-resolved model sharing
                 # the tick loop: its admit + fused propose signatures and
@@ -355,18 +371,24 @@ class ServeEngine:
                 # warm set, so zero lazy solves holds with speculation on
                 vtoks = jax.ShapeDtypeStruct(
                     (self.num_slots, self.spec_k + 1), jnp.int32)
-                jax.eval_shape(self.spec_art.verify_raw, self.params,
-                               self.art.state_shapes, vtoks, active)
+                with self.attrib.capture("spec-verify"):
+                    jax.eval_shape(self.spec_art.verify_raw, self.params,
+                                   self.art.state_shapes, vtoks, active)
                 dprompt = jax.ShapeDtypeStruct((1, self.prompt_pad),
                                                jnp.int32)
-                jax.eval_shape(self.spec_art.draft_admit_raw,
-                               self.spec_draft_params,
-                               self.spec_art.draft_state_shapes,
-                               dprompt, scalar, scalar)
-                jax.eval_shape(self.spec_art.propose_raw,
-                               self.spec_draft_params,
-                               self.spec_art.draft_state_shapes,
-                               toks, active, toks, active)
+                # draft admission runs inside the engine's "admit" phase
+                # spans (spec requires paged, so the contiguous admit tag
+                # is never live at the same time)
+                with self.attrib.capture("admit"):
+                    jax.eval_shape(self.spec_art.draft_admit_raw,
+                                   self.spec_draft_params,
+                                   self.spec_art.draft_state_shapes,
+                                   dprompt, scalar, scalar)
+                with self.attrib.capture("spec-draft"):
+                    jax.eval_shape(self.spec_art.propose_raw,
+                                   self.spec_draft_params,
+                                   self.spec_art.draft_state_shapes,
+                                   toks, active, toks, active)
         self._warmed = True
         solved = cache.stats.warm_solves - before.warm_solves
         signatures = len(cache.warm_keys)
@@ -463,6 +485,7 @@ class ServeEngine:
             req = st.request
             prompt = np.full((1, self.prompt_pad), self.pad_id, np.int32)
             prompt[0, : req.prompt_len] = req.prompt
+            self.attrib.dispatch("admit")
             with self.tracer.phase("admit", slot=st.slot):
                 logits, self.state = self.art.admit_fn(
                     self.params, self.state, jnp.asarray(prompt),
@@ -494,6 +517,7 @@ class ServeEngine:
         req = st.request
         prompt = np.full((1, self.prompt_pad), self.pad_id, np.int32)
         prompt[0, : req.prompt_len] = req.prompt
+        self.attrib.dispatch("admit")
         with self.tracer.phase("admit", slot=st.slot, draft=True):
             _, self.draft_state = self.spec_art.draft_admit_fn(
                 self.spec_draft_params, self.draft_state, jnp.asarray(prompt),
@@ -527,6 +551,7 @@ class ServeEngine:
         chunk[0, :n] = seq[start: start + n]
         blocks = np.zeros((self.art.max_blocks,), np.int32)
         blocks[: len(st.blocks)] = st.blocks
+        self.attrib.dispatch(f"prefill-chunk@{bucket}")
         with self.tracer.phase("prefill-chunk", slot=st.slot, n=n,
                                bucket=bucket):
             logits, self.state = self.art.prefill_fn(
@@ -555,6 +580,8 @@ class ServeEngine:
         (blocks were allocated at budget — the allocator is untouched).
         Two device dispatches commit up to k + 1 tokens per lane."""
         k = self.spec_k
+        self.attrib.dispatch("spec-draft")
+        self.attrib.dispatch("spec-verify")
         t0 = time.perf_counter()
         start_toks = np.where(mask, self._next_tok, self.pad_id)
         catch_mask = mask & self._lag
@@ -667,6 +694,7 @@ class ServeEngine:
             produced += self._spec_round(mask)
         elif ready:
             toks = np.where(mask, self._next_tok, self.pad_id)
+            self.attrib.dispatch("decode")
             with tr.phase("decode", n=ready):
                 logits, self.state = self.art.decode_fn(
                     self.params, self.state,
@@ -699,7 +727,27 @@ class ServeEngine:
                 and self.sched.tick % self.metrics_interval_ticks == 0):
             self._publish_registry()
             self.registry.snapshot(tick=self.sched.tick)
+            if self.tracer.enabled:
+                self._emit_counters()
         return produced
+
+    def _emit_counters(self) -> None:
+        """Perfetto counter tracks at the metrics snapshot cadence
+        (traced runs only): engine progress, pool pressure and attributed
+        device seconds by bound class — the auditor's running view."""
+        tr = self.tracer
+        m = self.metrics
+        tr.counter("engine_progress", {
+            "generated_tokens": m.generated_tokens,
+            "queued": self.sched.pending,
+        })
+        if self.paged:
+            tr.counter("block_pool", {
+                "blocks_in_use": self.sched.pool.blocks_in_use,
+                "free_blocks": self.sched.pool.free_blocks,
+            })
+        tr.counter("attrib_device_s", self.attrib.class_seconds(
+            tr.phase_durations(), cache=current_context().plan_cache))
 
     # ------------------------------------------------------------ driving
     def run(self, requests: Iterable[Request] = ()) -> EngineMetrics:
@@ -795,6 +843,9 @@ class ServeEngine:
             self.metrics.record_speculation(
                 self.spec_stats, draft_arch=self.spec_draft_cfg.name,
                 draft_quant=self.spec_draft_quant)
+        self.metrics.slo_burn = self.metrics.slo_burn_summary(
+            None if self.ttft_target_ms is None
+            else self.ttft_target_ms / 1e3)
         if self.tracer.enabled:
             self.metrics.timing = self.tracer.phase_summary()
             for name, durs in self.tracer.phase_durations().items():
@@ -803,10 +854,38 @@ class ServeEngine:
                     "engine phase span duration (s)")
                 for d in durs:
                     h.observe(d)
+            # the balance auditor's join: apportion traced device phase
+            # seconds across GEMM signatures and compare each cached plan
+            # against the model + its solve-time snapshot. Reads
+            # cache.entries directly — steady-state counters untouched.
+            self.metrics.attribution = self.attrib.summarize(
+                self.tracer.phase_durations(), cache=cache)
+            self._publish_attrib(self.metrics.attribution)
         self._publish_registry()
         if self.metrics_interval_ticks:
             self.registry.snapshot(tick=self.sched.tick)
         return self.metrics
+
+    def _publish_attrib(self, a: dict) -> None:
+        """Mirror the attribution summary into ``repro_attrib_*`` gauges
+        plus a measured-vs-modeled ratio histogram."""
+        reg = self.registry
+        reg.ingest("attrib", {
+            "signatures": a["signatures"],
+            "drifted": a["drifted_count"],
+            "attributed_device_s": a["attributed_device_s"],
+            "traced_device_s": a["traced_device_s"],
+            "unattributed_device_s": a["unattributed_device_s"],
+            "reconciliation_error": a["reconciliation_error"],
+            "bound_s": a["bound_s"],
+        })
+        h = reg.histogram(
+            "repro_attrib_measured_vs_modeled",
+            "per-signature measured/modeled device seconds ratio",
+            buckets=(0.25, 0.5, 0.9, 1.1, 2.0, 8.0, 64.0, 1024.0))
+        for row in a["by_device_s"]:
+            if row["measured_vs_modeled"] is not None:
+                h.observe(row["measured_vs_modeled"])
 
     def _publish_registry(self) -> None:
         """Mirror the subsystem counters into the registry (gauges named

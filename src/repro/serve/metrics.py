@@ -57,6 +57,10 @@ class EngineMetrics:
         default_factory=lambda: {"enabled": False})
     plan_cache: dict[str, Any] = dataclasses.field(default_factory=dict)
     timing: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # balance-auditor section (traced runs only, like timing)
+    attribution: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # SLO burn-rate monitor (always exported; deterministic)
+    slo_burn: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------ record
     def record_tick(self, occupied: int, new_tokens: int,
@@ -199,6 +203,55 @@ class EngineMetrics:
             }
         return out
 
+    def slo_burn_summary(self, target_ttft_s: float | None, *,
+                         window: int = 32,
+                         budget_miss_rate: float = 0.1) -> dict[str, Any]:
+        """Rolling TTFT-miss budget per priority class (SRE burn rate).
+
+        A request *misses* when its user-visible TTFT (queue + ttft) exceeds
+        ``target_ttft_s``, or when it died with ``deadline_missed``. The
+        rolling window is the last ``window`` requests per class in finish
+        order — deterministic under SimClock. ``burn_rate`` is the rolling
+        miss rate over the budgeted rate (> 1.0 means the class is burning
+        its error budget faster than allowed → ``alert``). With no TTFT
+        target only hard deadline misses count.
+        """
+        by_prio: dict[int, list[dict]] = {}
+        for r in self.requests:
+            by_prio.setdefault(int(r["priority"]), []).append(r)
+
+        def _missed(r: dict) -> bool:
+            if r["finish_reason"] == "deadline_missed":
+                return True
+            if target_ttft_s is None:
+                return False
+            if r["queue_s"] is None or r["ttft_s"] is None:
+                return False
+            return (r["queue_s"] + r["ttft_s"]) > target_ttft_s
+
+        classes: dict[str, Any] = {}
+        for prio in sorted(by_prio):
+            rs = by_prio[prio]
+            recent = rs[-window:]
+            misses = sum(_missed(r) for r in recent)
+            rate = misses / len(recent) if recent else None
+            burn = (rate / budget_miss_rate
+                    if rate is not None and budget_miss_rate > 0 else None)
+            classes[str(prio)] = {
+                "n": len(rs),
+                "window_n": len(recent),
+                "misses_in_window": misses,
+                "rolling_miss_rate": rate,
+                "burn_rate": burn,
+                "alert": bool(burn is not None and burn > 1.0),
+            }
+        return {
+            "target_ttft_s": target_ttft_s,
+            "window": window,
+            "budget_miss_rate": budget_miss_rate,
+            "classes": classes,
+        }
+
     @property
     def tokens_per_sec(self) -> float | None:
         """Wall-clock throughput, or None when wall_s never advanced (a
@@ -237,6 +290,7 @@ class EngineMetrics:
             },
             "requests": list(self.requests),
             "slo": self.slo_summary(),
+            "slo_burn": dict(self.slo_burn),
             "budget": dict(self.budget),
             "block_pool": dict(self.block_pool),
             "kv_cache": dict(self.kv_cache),
@@ -248,6 +302,10 @@ class EngineMetrics:
             # traced runs only — untraced JSON stays bit-identical to
             # the pre-observability schema
             out["timing"] = dict(self.timing)
+        if self.attribution:
+            # balance auditor needs traced phase seconds to attribute, so
+            # this section is traced-only too
+            out["attribution"] = dict(self.attribution)
         return out
 
     def to_json(self, path: str | None = None, **kw) -> str:

@@ -94,6 +94,16 @@ GOLDEN = {
     "requests.*.arrival_tick": INT,
     "requests.*.admitted_tick": INT,
     "requests.*.finished_tick": OPT_INT,
+    # -------------------------------------------------------- slo burn
+    "slo_burn.target_ttft_s": OPT_NUM,
+    "slo_burn.window": INT,
+    "slo_burn.budget_miss_rate": NUM,
+    "slo_burn.classes.*.n": INT,
+    "slo_burn.classes.*.window_n": INT,
+    "slo_burn.classes.*.misses_in_window": INT,
+    "slo_burn.classes.*.rolling_miss_rate": OPT_NUM,
+    "slo_burn.classes.*.burn_rate": OPT_NUM,
+    "slo_burn.classes.*.alert": BOOL,
     # ------------------------------------------------------------- slo
     "slo.*.n": INT,
     "slo.*.finished": INT,
@@ -194,11 +204,53 @@ GOLDEN = {
     "timing.device_s": NUM,
     "timing.events_recorded": INT,
     "timing.events_dropped": INT,
+    # -------------------------------------- attribution (traced runs)
+    "attribution.tol": NUM,
+    "attribution.top_k": INT,
+    "attribution.signatures": INT,
+    "attribution.attributed_device_s": NUM,
+    "attribution.traced_device_s": NUM,
+    "attribution.unattributed_device_s": NUM,
+    "attribution.reconciliation_error": OPT_NUM,
+    "attribution.bound_s.*": NUM,
+    "attribution.bound_share.*": OPT_NUM,
+    "attribution.drifted_count": INT,
+    "attribution.drifted": LIST,
+    "attribution.by_device_s.*.key": STR,
+    "attribution.by_device_s.*.hw": STR,
+    "attribution.by_device_s.*.m": INT,
+    "attribution.by_device_s.*.k": INT,
+    "attribution.by_device_s.*.n": INT,
+    "attribution.by_device_s.*.in_dtype": STR,
+    "attribution.by_device_s.*.out_dtype": STR,
+    "attribution.by_device_s.*.layout": STR,
+    "attribution.by_device_s.*.bm": INT,
+    "attribution.by_device_s.*.bk": INT,
+    "attribution.by_device_s.*.bn": INT,
+    "attribution.by_device_s.*.calls": INT,
+    "attribution.by_device_s.*.device_s": NUM,
+    "attribution.by_device_s.*.share": OPT_NUM,
+    "attribution.by_device_s.*.t_comp_s": NUM,
+    "attribution.by_device_s.*.t_mem_s": NUM,
+    "attribution.by_device_s.*.t_total_s": NUM,
+    "attribution.by_device_s.*.balance_ratio": OPT_NUM,
+    "attribution.by_device_s.*.snapshot_ratio": OPT_NUM,
+    "attribution.by_device_s.*.snapshot_t_total_s": OPT_NUM,
+    "attribution.by_device_s.*.ratio_deviation": OPT_NUM,
+    "attribution.by_device_s.*.time_deviation": OPT_NUM,
+    "attribution.by_device_s.*.bound": STR,
+    "attribution.by_device_s.*.drifted": BOOL,
+    "attribution.by_device_s.*.measured_per_call_s": OPT_NUM,
+    "attribution.by_device_s.*.measured_vs_modeled": OPT_NUM,
+    "attribution.by_device_s.*.suggested_bm": OPT_INT,
+    "attribution.by_device_s.*.suggested_bk": OPT_INT,
+    "attribution.by_device_s.*.suggested_bn": OPT_INT,
+    "attribution.by_device_s.*.suggested_gain": OPT_NUM,
 }
 
-TOP_LEVEL = {"engine", "aggregate", "requests", "slo", "budget",
-             "block_pool", "kv_cache", "prefix_cache", "speculation",
-             "plan_cache"}
+TOP_LEVEL = {"engine", "aggregate", "requests", "slo", "slo_burn",
+             "budget", "block_pool", "kv_cache", "prefix_cache",
+             "speculation", "plan_cache"}
 
 
 def walk(node, prefix=""):
@@ -257,7 +309,7 @@ def _export(engine, reqs):
     engine.plan_warmup()
     m = engine.run(reqs)
     d = json.loads(m.to_json())   # through JSON: pure python leaf types
-    assert set(d) - {"timing"} == TOP_LEVEL
+    assert set(d) - {"timing", "attribution"} == TOP_LEVEL
     return d
 
 
@@ -316,6 +368,8 @@ def test_metrics_schema_golden(dense_setup):
                               weight=1.0)],
                      seed=0))
     assert "timing" in d and d["timing"]["phases"]
+    assert "attribution" in d and d["attribution"]["by_device_s"]
+    assert d["attribution"]["drifted"] == []   # clean cache, no drift
     seen |= check(d)
 
     unexercised = set(GOLDEN) - seen

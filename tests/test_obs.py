@@ -155,8 +155,79 @@ def test_null_tracer_is_inert():
     NULL_TRACER.instant("x")
     NULL_TRACER.request_event("submit", 1)
     NULL_TRACER.phase_span("decode", 0.0, 1.0)
+    NULL_TRACER.counter("pool", {"in_use": 3})
     assert NULL_TRACER.phase_summary() == {}
     assert NULL_TRACER.phase_durations() == {}
+
+
+def test_null_tracer_never_reads_a_clock_or_allocates(monkeypatch):
+    """The zero-cost contract, enforced: with every clock source booby-
+    trapped, the NullTracer's whole surface still runs, and it retains no
+    per-call state (nothing to allocate, nothing to leak)."""
+    import time as _time
+
+    def bomb():
+        raise AssertionError("NullTracer read a clock")
+
+    monkeypatch.setattr(_time, "perf_counter", bomb)
+    monkeypatch.setattr(_time, "monotonic", bomb)
+    monkeypatch.setattr(_time, "time", bomb)
+    NULL_TRACER.reset()
+    NULL_TRACER.set_tick(9)
+    with NULL_TRACER.phase("decode", slot=0, n=4):
+        pass
+    NULL_TRACER.phase_span("spec-draft", 1.0, 2.0)
+    NULL_TRACER.instant("plan-miss", key="k")
+    NULL_TRACER.counter("attrib", {"compute": 1.0})
+    NULL_TRACER.request_event("submit", 1)
+    NULL_TRACER.request_event("finish", 1, reason="stop")
+    # a singleton with no instance state: nothing accumulated anywhere
+    assert NULL_TRACER.__dict__ == {}
+    assert NULL_TRACER.phase_durations() == {}
+
+
+def test_tracer_ring_wraparound_still_exports_valid_chrome_json():
+    """Once the ring wraps, begin events may be gone while ends survive;
+    the export must degrade those to balanced instants, not emit a file
+    viewers reject."""
+    tr = Tracer(ring_events=16, clock=FakeClock(0.25))
+    for i in range(30):
+        tr.set_tick(i)
+        tr.request_event("submit", i)
+        with tr.phase("decode", slot=i % 2):
+            pass
+        tr.counter("pool", {"in_use": float(i)})
+        tr.request_event("finish", i, reason="stop")
+    assert tr.events_dropped > 0
+    obj = tr.to_chrome()
+    # round-trips through JSON and validates despite the dropped begins
+    info = validate_chrome_trace(json.loads(json.dumps(obj)))
+    assert obj["otherData"]["events_dropped"] == tr.events_dropped
+    assert info["counter_samples"] > 0
+    # durations accumulate outside the ring: nothing timed was lost
+    assert tr.phase_summary()["phases"]["decode"]["count"] == 30
+
+
+def test_counter_tracks_export_and_validate():
+    tr = Tracer(clock=FakeClock(1.0))
+    tr.set_tick(2)
+    tr.counter("attrib_device_s", {"compute": 0.5, "memory": 1.5,
+                                   "drifted": 0})
+    tr.counter("attrib_device_s", {"compute": 0.75, "memory": 2.0,
+                                   "drifted": 0})
+    obj = tr.to_chrome()
+    cs = [e for e in obj["traceEvents"] if e["ph"] == "C"]
+    assert len(cs) == 2
+    # args are pure numeric series — no tick smuggled in, floats only
+    assert cs[0]["args"] == {"compute": 0.5, "memory": 1.5, "drifted": 0.0}
+    assert cs[1]["ts"] > cs[0]["ts"]
+    assert all(e["pid"] == 1 and e["tid"] == 0 for e in cs)
+    info = validate_chrome_trace(obj)
+    assert info["counter_samples"] == 2
+    bad = {"traceEvents": [{"name": "c", "ph": "C", "ts": 0,
+                            "args": {"x": "oops"}}]}
+    with pytest.raises(ValueError, match="numeric series"):
+        validate_chrome_trace(bad)
 
 
 def test_phase_glossary_covers_engine_phases():
@@ -184,7 +255,8 @@ def test_registry_counter_gauge_histogram():
     for v in (0.05, 0.5, 5.0):
         h.observe(v)
     col = h.collect()
-    assert col["buckets"] == {0.1: 1, 1.0: 2}   # cumulative
+    # cumulative Prometheus semantics: le="1" counts <=0.1 too, +Inf = count
+    assert col["buckets"] == {"0.1": 1, "1": 2, "+Inf": 3}
     assert col["count"] == 3 and col["sum"] == pytest.approx(5.55)
     # same name, same kind -> same object; different kind -> TypeError
     assert reg.counter("repro_test_total") is c
@@ -219,12 +291,40 @@ def test_registry_snapshot_and_prometheus_text():
     reg.snapshot(tick=8)
     assert [s["tick"] for s in reg.snapshots] == [4, 8]
     assert [s["repro_x"] for s in reg.snapshots] == [1.0, 2.0]
-    assert reg.snapshots[1]["repro_y_seconds"] == {"sum": 0.5, "count": 1}
+    hs = reg.snapshots[1]["repro_y_seconds"]
+    # snapshots carry the full cumulative bucket vector, not a collapsed
+    # sum/count pair — they must round-trip the same distribution the
+    # text exposition serves
+    assert hs["sum"] == 0.5 and hs["count"] == 1
+    assert hs["buckets"]["+Inf"] == 1
+    assert hs["buckets"]["0.1"] == 0 and hs["buckets"]["1"] == 1
     text = reg.to_prometheus_text()
     assert "# TYPE repro_x gauge" in text
     assert "# TYPE repro_y_seconds histogram" in text
     assert 'repro_y_seconds_bucket{le="+Inf"} 1' in text
     assert "repro_y_seconds_count 1" in text
+
+
+def test_histogram_prometheus_exposition_is_cumulative_and_complete():
+    """A scraper-valid histogram: one bucket line per edge plus +Inf,
+    counts monotone non-decreasing, +Inf equal to _count."""
+    reg = Registry()
+    h = reg.histogram("repro_z_seconds", "phase time",
+                      buckets=(0.001, 0.01, 0.1, 1.0))
+    for v in (0.0005, 0.05, 0.05, 0.5, 50.0):
+        h.observe(v)
+    text = reg.to_prometheus_text()
+    bucket_lines = [ln for ln in text.splitlines()
+                    if ln.startswith("repro_z_seconds_bucket")]
+    assert len(bucket_lines) == 5  # 4 edges + +Inf
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in bucket_lines]
+    assert counts == sorted(counts)              # cumulative => monotone
+    assert 'le="+Inf"} 5' in bucket_lines[-1]    # +Inf == count
+    assert counts == [1, 1, 3, 4, 5]
+    assert "repro_z_seconds_sum" in text and "repro_z_seconds_count 5" in text
+    # HELP lines escape newlines/backslashes per the exposition format
+    reg.gauge("repro_esc", "line1\nline2\\x")
+    assert r"# HELP repro_esc line1\nline2\\x" in reg.to_prometheus_text()
 
 
 def test_prom_name_sanitizes():
@@ -278,8 +378,10 @@ def test_traced_run_is_bit_identical_to_untraced(dense_setup):
     _, on_toks, on_d = go(tr)
     assert on_toks == off_toks
     assert "timing" not in off_d
+    assert "attribution" not in off_d   # the auditor is traced-only too
     timing = on_d.pop("timing")
-    assert on_d == off_d        # bit-identical modulo the timing section
+    on_d.pop("attribution")
+    assert on_d == off_d    # bit-identical modulo the traced-only sections
     assert timing["phases"]["decode"]["count"] > 0
     for name in ("expire", "bind", "prefill-chunk", "sample"):
         assert name in timing["phases"], name

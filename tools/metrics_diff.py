@@ -31,9 +31,49 @@ def _throughput(metrics: dict) -> tuple[str, float | None]:
     return "tokens_per_tick", None
 
 
-def diff(current: dict, baseline: dict, tolerance: float) -> list[str]:
+def diff_nested(cur, base, *, tolerance: float, path: str = "") -> list[str]:
+    """None-safe recursive comparison of a nested metrics section.
+
+    Numeric leaves present on *both* sides must agree within ``tolerance``
+    (relative; absolute when the baseline is 0). Everything that cannot be
+    compared is skipped, never failed: ``None`` on either side (a ratio
+    whose denominator never moved), a key missing from one side (schema
+    grew), a whole section missing from one side (traced vs untraced run),
+    and non-numeric leaves. That keeps the gate meaningful on sections like
+    ``timing`` and ``attribution`` that only traced runs carry.
+    """
+    if cur is None or base is None:
+        return []
+    if isinstance(cur, dict) and isinstance(base, dict):
+        out: list[str] = []
+        for k in sorted(set(cur) & set(base)):
+            sub = f"{path}.{k}" if path else str(k)
+            out += diff_nested(cur[k], base[k], tolerance=tolerance, path=sub)
+        return out
+    if isinstance(cur, list) and isinstance(base, list):
+        out = []
+        for i, (c, b) in enumerate(zip(cur, base)):
+            out += diff_nested(c, b, tolerance=tolerance, path=f"{path}[{i}]")
+        return out
+    num = (int, float)
+    if (isinstance(cur, num) and isinstance(base, num)
+            and not isinstance(cur, bool) and not isinstance(base, bool)):
+        delta = abs(cur - base)
+        bound = tolerance * abs(base) if base else tolerance
+        if delta > bound:
+            return [f"{path}: {cur} vs baseline {base} "
+                    f"(delta {delta:.4g} > {bound:.4g})"]
+    return []
+
+
+def diff(current: dict, baseline: dict, tolerance: float,
+         sections: tuple[str, ...] = ()) -> list[str]:
     """Regression messages (empty = pass)."""
     problems: list[str] = []
+    for name in sections:
+        problems += diff_nested(
+            current.get(name), baseline.get(name),
+            tolerance=tolerance, path=name)
     plan = current.get("plan_cache", {})
     if plan.get("steady_state") is False:
         problems.append(
@@ -72,6 +112,11 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="overwrite the baseline with the current metrics "
                          "instead of diffing (intentional perf change)")
+    ap.add_argument("--sections", default="", metavar="A,B,C",
+                    help="also compare these top-level sections leaf-by-"
+                         "leaf (None-safe; e.g. timing,attribution — "
+                         "sections or leaves missing on either side are "
+                         "skipped, not failed)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -84,7 +129,8 @@ def main(argv: list[str] | None = None) -> int:
         return 0
     with open(args.baseline) as f:
         baseline = json.load(f)
-    problems = diff(current, baseline, args.tolerance)
+    sections = tuple(s for s in args.sections.split(",") if s)
+    problems = diff(current, baseline, args.tolerance, sections)
     cur_key, cur = _throughput(current)
     _, base = _throughput(baseline)
     print(f"{cur_key}: current={cur} baseline={base} "
